@@ -1,0 +1,70 @@
+"""Ablation study (paper §4.3 spirit): switch off each Parallax stage.
+
+Configurations:
+  * full          — partitioning + balancing + budget scheduling,
+  * no-partition  — §3.1 delegate cost model off,
+  * no-balance    — §3.1 β-refinement off (raw layers become groups),
+  * naive-arena   — §3.2 liveness reuse off (Table 5 Naive),
+  * w1            — §3.3 width capped at 1 (serialized).
+
+Reports latency (CPU wall clock, reduced DAGs) and planned memory so the
+contribution of each stage is isolated.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ParallaxConfig, PlanExecutor, compile_plan
+from .common import block_outputs, build_dag, time_fn
+
+BASE = ParallaxConfig(budget=1 << 30)
+VARIANTS = {
+    "full": BASE,
+    "no-partition": BASE.with_(enable_partitioning=False),
+    "no-balance": BASE.with_(enable_balancing=False),
+    "naive-arena": BASE.with_(naive_arenas=True),
+    "w1": BASE.with_(max_parallel=1),
+}
+
+
+def run(archs=("whisper-tiny", "dbrx-132b"), batch=1, seq=32, iters=10):
+    out = {}
+    for arch in archs:
+        # full-scale FLOP metadata so the §3.1 cost model actually
+        # accepts delegate regions (reduced widths alone fall below 1e9)
+        cfg, g, make = build_dag(arch, batch, seq, full_flops=True)
+        env = make(np.random.default_rng(0))
+        rows = []
+        for name, pcfg in VARIANTS.items():
+            plan = compile_plan(g, pcfg)
+            ex = PlanExecutor(plan, mode="parallax")
+            lo, hi, mean = time_fn(lambda: block_outputs(ex(env)),
+                                   warmup=3, iters=iters)
+            rows.append({
+                "variant": name, "mean_ms": mean * 1e3,
+                "width": plan.schedule.max_width(),
+                "arena_pool_kib": plan.pooled_arena_peak() / 1024,
+                "delegates": len(plan.partition_report.accepted)
+                if plan.partition_report else 0,
+            })
+        out[arch] = rows
+    return out
+
+
+def main():
+    out = run()
+    print("# Ablations — contribution of each Parallax stage")
+    for arch, rows in out.items():
+        print(f"\n## {arch}")
+        print(f"{'variant':14s} {'mean ms':>9s} {'width':>6s} "
+              f"{'arena KiB':>10s} {'delegates':>10s}")
+        for r in rows:
+            print(f"{r['variant']:14s} {r['mean_ms']:9.2f} "
+                  f"{r['width']:6d} {r['arena_pool_kib']:10.0f} "
+                  f"{r['delegates']:10d}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.dag_export import export_graph
+
+# The five DNNs of the paper's Table 2, mapped to our assigned pool:
+# Whisper-Tiny appears verbatim; the others are matched by workload class
+# (vision-transformer-like, text encoder, detector-like CNN -> closest
+# assigned archs).
+PAPER_MODEL_SET = ["whisper-tiny", "qwen2-vl-2b", "stablelm-3b",
+                   "mamba2-370m", "dbrx-132b"]
+
+
+def build_dag(arch: str, batch: int = 1, seq: int = 16,
+              mode: str = "reduced", seed: int = 0,
+              full_flops: bool = False):
+    """(cfg, graph, make_inputs).  'reduced' graphs execute on CPU;
+    'structural' graphs keep full depth/heads/experts AND full-scale
+    FLOP metadata (via flops_cfg) for Table 7 / delegation decisions.
+    ``full_flops`` attaches full-scale FLOP metadata to a reduced
+    (executable) graph so the delegation cost model behaves as at
+    production scale while fns stay CPU-runnable."""
+    full = get_config(arch)
+    cfg = full.reduced() if mode == "reduced" else full.structural()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(seed))
+    g, make = export_graph(
+        cfg, params, batch, seq,
+        flops_cfg=full if (mode == "structural" or full_flops) else None)
+    return cfg, g, make
+
+
+def time_fn(fn, *args, warmup: int = 3, iters: int = 10):
+    """Returns (min_s, max_s, mean_s) over iters after warmup."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    return min(times), max(times), sum(times) / len(times)
+
+
+def block_outputs(result):
+    jax.block_until_ready(list(result.outputs.values()))
+    return result
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,81 @@
+"""Table 6 analogue: layer-wise latency, serialized vs Parallax-grouped,
+with branch counts (BR).
+
+Both executors run *compiled* branches (so the delta isolates branch
+grouping, the paper's per-layer claim): the baseline plan caps
+``max_parallel=1`` (each branch dispatched alone, in order); the Parallax
+plan groups balanced branches per §3.1/§3.3.  Profiles Whisper (the
+paper's own layer table) plus a MoE arch whose expert branches group.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ParallaxConfig, PlanExecutor, compile_plan
+from .common import block_outputs, build_dag
+
+CFG_W1 = ParallaxConfig(budget=1 << 30, max_parallel=1)
+CFG_PLX = ParallaxConfig(budget=1 << 30, max_parallel=8)
+
+
+def _layer_times(ex, env, iters):
+    for _ in range(3):
+        block_outputs(ex(env))
+    acc = None
+    widths = None
+    for _ in range(iters):
+        res = block_outputs(ex(env))
+        ts = [t.seconds for t in res.layer_timings]
+        acc = ts if acc is None else [a + t for a, t in zip(acc, ts)]
+        widths = [t.width for t in res.layer_timings]
+    return [a / iters for a in acc], widths
+
+
+def run(archs=("whisper-tiny", "dbrx-132b"), batch=1, seq=32, iters=10):
+    out = {}
+    for arch in archs:
+        cfg, g, make = build_dag(arch, batch, seq)
+        env = make(np.random.default_rng(0))
+        base_ex = PlanExecutor(compile_plan(g, CFG_W1), mode="parallax")
+        plx_plan = compile_plan(g, CFG_PLX)
+        plx_ex = PlanExecutor(plx_plan, mode="parallax")
+
+        base_t, _ = _layer_times(base_ex, env, iters)
+        plx_t, widths = _layer_times(plx_ex, env, iters)
+        assert len(base_t) == len(plx_t)        # same layer structure
+        out[arch] = [{"layer": i, "serialized_ms": s * 1e3,
+                      "parallax_ms": p * 1e3, "branches": w}
+                     for i, (s, p, w) in enumerate(zip(base_t, plx_t,
+                                                       widths))]
+    return out
+
+
+def main():
+    out = run()
+    print("# Table 6 analogue — layer latency (ms): serialized branches "
+          "vs grouped, and BR counts")
+    for arch, layers in out.items():
+        print(f"\n## {arch}")
+        print(f"{'layer':>5s} {'serial ms':>10s} {'plx ms':>9s} "
+              f"{'BR':>4s} {'delta':>8s}")
+        multi = [l for l in layers if l["branches"] > 1]
+        single = sorted((l for l in layers if l["branches"] == 1),
+                        key=lambda l: -l["serialized_ms"])[:3]
+        show = sorted(multi[:6] + single, key=lambda l: l["layer"])
+        for l in show:
+            d = 100 * (1 - l["parallax_ms"] / max(l["serialized_ms"],
+                                                  1e-9))
+            print(f"{l['layer']:5d} {l['serialized_ms']:10.3f} "
+                  f"{l['parallax_ms']:9.3f} {l['branches']:4d} "
+                  f"{d:+7.1f}%")
+        if multi:
+            tot_s = sum(l["serialized_ms"] for l in multi)
+            tot_p = sum(l["parallax_ms"] for l in multi)
+            print(f"  multi-branch layers total: {tot_s:.2f} -> "
+                  f"{tot_p:.2f} ms ({100*(1-tot_p/tot_s):+.1f}%)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

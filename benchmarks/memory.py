@@ -1,0 +1,66 @@
+"""Tables 4 & 5 analogue: peak arena memory per planner.
+
+Planners compared (bytes of activation arenas, reduced configs):
+  * naive          — every tensor its own buffer (paper Table 5 "Naive"),
+  * global-reuse   — one arena, aggressive liveness reuse (TFLite/ORT
+    class; blocks branch parallelism, §2),
+  * parallax-sum   — per-branch arenas with in-branch reuse, no sharing
+    (upper bound of §3.2),
+  * parallax-pool  — + cross-arena slab sharing over the §3.3 schedule
+    (the deployed configuration; paper's reported footprint).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (ParallaxConfig, compile_plan, plan_branch_arena,
+                        plan_global_arena, extract_branches)
+from .common import PAPER_MODEL_SET, build_dag
+
+CFG = ParallaxConfig(budget=1 << 30)
+
+
+def run(batch=1, seq=32, archs=None):
+    rows = []
+    for arch in archs or PAPER_MODEL_SET:
+        cfg, g, _ = build_dag(arch, batch, seq)
+        plan = compile_plan(g, CFG)
+        gpost = plan.graph
+
+        naive_total = 0
+        for b in extract_branches(gpost):
+            p, _ = plan_branch_arena(gpost, b.id, b.nodes, naive=True)
+            naive_total += p.size
+        global_plan = plan_global_arena(gpost, gpost.topo_order())
+
+        rows.append({
+            "arch": arch,
+            "naive": naive_total,
+            "global_reuse": global_plan.size,
+            "parallax_sum": plan.sum_arena_sizes(),
+            "parallax_pool": plan.pooled_arena_peak(),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("# Tables 4/5 analogue — arena footprint (KiB, reduced configs)")
+    print(f"{'arch':20s} {'naive':>10s} {'global':>10s} "
+          f"{'plx-sum':>10s} {'plx-pool':>10s} {'vs-naive':>9s} "
+          f"{'overhead':>9s}")
+    for r in rows:
+        vs_naive = 100.0 * (1 - r["parallax_pool"] / max(r["naive"], 1))
+        overhead = 100.0 * (r["parallax_pool"]
+                            / max(r["global_reuse"], 1) - 1)
+        print(f"{r['arch']:20s} {r['naive']/1024:10.1f} "
+              f"{r['global_reuse']/1024:10.1f} "
+              f"{r['parallax_sum']/1024:10.1f} "
+              f"{r['parallax_pool']/1024:10.1f} {vs_naive:8.1f}% "
+              f"{overhead:+8.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

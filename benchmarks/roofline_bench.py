@@ -1,0 +1,56 @@
+"""§Roofline table builder: reads dry-run artifacts into one report.
+
+Per (arch x shape): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS ratio, and per-device memory — EXPERIMENTS.md §Roofline is
+generated from this module's output.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "pod16x16"):
+    rows = []
+    for f in sorted(ARTIFACTS.glob(f"*__{mesh}*.json")):
+        rec = json.loads(f.read_text())
+        rows.append(rec)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def main(mesh: str = "pod16x16"):
+    rows = load(mesh)
+    print(f"# §Roofline — single-pod baselines ({mesh}); "
+          "terms in seconds/step")
+    print(f"{'arch':18s} {'shape':12s} {'var':7s} {'compute':>9s} "
+          f"{'memory':>9s} {'collect':>9s} {'dominant':>10s} "
+          f"{'useful':>7s} {'GiB/dev':>8s} {'GiB*':>7s} {'compile':>8s}")
+    print("# GiB* = TPU-corrected (CPU bf16->f32 dot-convert artifact "
+          "removed; EXPERIMENTS.md §Dry-run)")
+    for r in rows:
+        if r["status"] == "skipped":
+            print(f"{r['arch']:18s} {r['shape']:12s} SKIP ({r['reason']})")
+            continue
+        if r["status"] == "error":
+            print(f"{r['arch']:18s} {r['shape']:12s} ERROR")
+            continue
+        rl = r["roofline"]
+        corr = r.get("per_device_gb_tpu_corrected", r["per_device_gb"])
+        print(f"{r['arch']:18s} {r['shape']:12s} "
+              f"{r.get('variant',''):7s} "
+              f"{rl['compute_s']:9.4f} {rl['memory_s']:9.4f} "
+              f"{rl['collective_s']:9.4f} {rl['dominant']:>10s} "
+              f"{rl['useful_flops_ratio']:7.2f} "
+              f"{r['per_device_gb']:8.2f} {corr:7.2f} "
+              f"{r['compile_s']:7.1f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "pod16x16")

@@ -1,0 +1,123 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [table3|table45|table6|table7|fig3|roofline]
+
+Prints, per assignment contract, ``name,us_per_call,derived`` CSV lines
+after each table's human-readable block.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from . import (ablations, beta_sweep, graphstats, latency, layerwise,
+               memory, roofline_bench, threads)
+from .common import csv_row
+
+
+def table3():
+    rows = latency.main()
+    print("\n# csv")
+    for r in rows:
+        print(csv_row(f"latency/{r['arch']}/{r['mode']}",
+                      r["mean_ms"] * 1e3,
+                      f"min_ms={r['min_ms']:.2f};max_ms={r['max_ms']:.2f}"))
+    return rows
+
+
+def table45():
+    rows = memory.main()
+    print("\n# csv")
+    for r in rows:
+        for k in ("naive", "global_reuse", "parallax_sum",
+                  "parallax_pool"):
+            print(csv_row(f"memory/{r['arch']}/{k}", 0.0,
+                          f"bytes={r[k]}"))
+    return rows
+
+
+def table6():
+    out = layerwise.main()
+    print("\n# csv")
+    for arch, layers in out.items():
+        for l in layers:
+            print(csv_row(f"layerwise/{arch}/L{l['layer']}",
+                          l["parallax_ms"] * 1e3,
+                          f"serial_ms={l['serialized_ms']:.3f};"
+                          f"br={l['branches']}"))
+    return out
+
+
+def table7():
+    rows = graphstats.main()
+    print("\n# csv")
+    for r in rows:
+        for phase in ("pre", "post", "parallax"):
+            n, l, p, m = r[phase]
+            print(csv_row(f"graphstats/{r['arch']}/{phase}", 0.0,
+                          f"nodes={n};layers={l};par_layers={p};"
+                          f"max_branches={m}"))
+    return rows
+
+
+def fig3():
+    out = threads.main()
+    print("\n# csv")
+    for arch, rows in out.items():
+        for r in rows:
+            print(csv_row(f"threads/{arch}/w{r['width']}",
+                          r["mean_ms"] * 1e3,
+                          f"sched_width={r['sched_width']}"))
+    return out
+
+
+def roofline():
+    rows = roofline_bench.main()
+    print("\n# csv")
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        bound_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        print(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}", bound_s * 1e6,
+            f"dominant={rl['dominant']};useful="
+            f"{rl['useful_flops_ratio']:.2f};gib={r['per_device_gb']}"))
+    return rows
+
+
+def ablation():
+    out = ablations.main()
+    print("\n# csv")
+    for arch, rows in out.items():
+        for r in rows:
+            print(csv_row(f"ablation/{arch}/{r['variant']}",
+                          r["mean_ms"] * 1e3,
+                          f"width={r['width']};delegates={r['delegates']}"))
+    return out
+
+
+def beta():
+    out = beta_sweep.main()
+    print("\n# csv")
+    for arch, rows in out.items():
+        for r in rows:
+            print(csv_row(f"beta/{arch}/b{r['beta']}", 0.0,
+                          f"groups={r['groups']};width={r['max_width']}"))
+    return out
+
+
+ALL = {"table3": table3, "table45": table45, "table6": table6,
+       "table7": table7, "fig3": fig3, "ablation": ablation,
+       "beta": beta, "roofline": roofline}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    for name in which:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        ALL[name]()
+
+
+if __name__ == '__main__':
+    main()

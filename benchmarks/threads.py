@@ -1,0 +1,48 @@
+"""Figure 3 analogue: latency vs maximum parallel branch width.
+
+The paper sweeps its thread cap 1..8 on Pixel 6; our TPU adaptation's
+equivalent knob is ``ParallaxConfig.max_parallel`` — the branch-batch
+width of fused parallel groups."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ParallaxConfig, PlanExecutor, compile_plan
+from .common import block_outputs, build_dag, time_fn
+
+
+def run(archs=("whisper-tiny", "dbrx-132b", "stablelm-3b"),
+        widths=(1, 2, 4, 6, 8), batch=1, seq=32, iters=10):
+    out = {}
+    for arch in archs:
+        cfg, g, make = build_dag(arch, batch, seq)
+        env = make(np.random.default_rng(0))
+        rows = []
+        for w in widths:
+            plan = compile_plan(g, ParallaxConfig(budget=1 << 30,
+                                                  max_parallel=w))
+            ex = PlanExecutor(plan, mode="parallax")
+            lo, hi, mean = time_fn(lambda: block_outputs(ex(env)),
+                                   warmup=3, iters=iters)
+            rows.append({"width": w, "mean_ms": mean * 1e3,
+                         "min_ms": lo * 1e3,
+                         "sched_width": plan.schedule.max_width()})
+        out[arch] = rows
+    return out
+
+
+def main():
+    out = run()
+    print("# Fig. 3 analogue — latency vs max parallel width")
+    for arch, rows in out.items():
+        base = rows[0]["mean_ms"]
+        line = " ".join(f"w{r['width']}={r['mean_ms']:.1f}ms"
+                        f"({100*(1-r['mean_ms']/base):+.0f}%)"
+                        for r in rows)
+        print(f"{arch:20s} {line}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

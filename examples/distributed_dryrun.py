@@ -1,0 +1,47 @@
+"""Distributed dry-run walk-through: one (arch × shape) on the
+production mesh, showing everything the launcher derives automatically.
+
+    python examples/distributed_dryrun.py [arch] [shape] [--multi-pod] [--opt]
+
+(Must run as its own process: the 512-device host-platform override has
+to precede jax initialization.)
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+# these two lines must precede every other import (device-count lock)
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import jax
+
+from repro.launch.dryrun import run_case
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "h2o-danube-3-4b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+multi_pod = "--multi-pod" in sys.argv
+opt = "--opt" in sys.argv
+
+mesh = make_production_mesh(multi_pod=multi_pod)
+print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+      f"({mesh.size} chips)\n")
+
+rec = run_case(arch, shape, multi_pod, opt=opt, save=False)
+if rec["status"] != "ok":
+    raise SystemExit(rec)
+
+print("\nmemory_analysis:")
+for k, v in rec["memory_analysis"].items():
+    print(f"  {k:38s} {v/2**30:10.3f} GiB")
+print("\ncollective schedule (per-device bytes by op):")
+for k, v in sorted(rec["collective_bytes"].items()):
+    print(f"  {k:20s} {v/2**20:12.2f} MiB  "
+          f"(x{rec['collective_counts'].get(k, 0)} ops)")
+rl = rec["roofline"]
+print(f"\nroofline: compute {rl['compute_s']:.4f}s | memory "
+      f"{rl['memory_s']:.4f}s | collective {rl['collective_s']:.4f}s "
+      f"-> {rl['dominant']}-bound")
+print(f"useful FLOPs ratio (6·N_active·D / HLO): "
+      f"{rl['useful_flops_ratio']:.2f}")

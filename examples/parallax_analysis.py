@@ -1,0 +1,74 @@
+"""Deep-dive: the paper's three stages on a heterogeneous MoE graph.
+
+    PYTHONPATH=src python examples/parallax_analysis.py
+
+Shows, for dbrx-132b (16 experts top-4):
+  (a) §3.1 delegate partitioning with the cost model's accept/reject
+      reasoning per region,
+  (b) branch/layer structure + β-balance groups,
+  (c) §3.2 arena plans (reuse hits, naive vs liveness sizes),
+  (d) §3.3 schedule under three different memory budgets.
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core import (CostModel, MOBILE_SOC, ParallaxConfig,
+                        compile_plan)
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.dag_export import export_graph
+
+full = get_config("dbrx-132b")
+cfg = full.reduced()
+api = build_model(cfg)
+params = api.init(jax.random.key(0))
+graph, _ = export_graph(cfg, params, batch=1, seq=64, flops_cfg=full)
+
+print("== (a) delegate partitioning (§3.1, full-scale FLOP metadata) ==")
+plan = compile_plan(graph, ParallaxConfig(budget=64 << 20))
+cm = CostModel()
+for r in plan.partition_report.regions[:10]:
+    why = []
+    if r.n_ops < cm.min_ops:
+        why.append(f"N={r.n_ops}<3")
+    if r.flops < cm.min_flops:
+        why.append(f"F={r.flops:.2e}<1e9")
+    if r.flops > 0 and r.boundary_bytes / r.flops > cm.max_bytes_per_flop:
+        why.append(f"B/F={r.boundary_bytes/r.flops:.3f}>0.1")
+    verdict = "ACCEPT" if r.accepted else f"reject ({', '.join(why)})"
+    print(f"  region N={r.n_ops:3d} F={r.flops:9.3e} "
+          f"B={r.boundary_bytes:8d} -> {verdict}")
+print(f"  ... {len(plan.partition_report.regions)} regions total, "
+      f"{len(plan.partition_report.accepted)} accepted")
+
+print("\n== (b) branch-layer structure ==")
+st = plan.stats_parallax
+print(f"  nodes={st.nodes} layers={st.layers} "
+      f"parallel-layers={st.parallel_layers} max-branches="
+      f"{st.max_branches}")
+widths = {}
+for sl in plan.schedule.layers:
+    for grp in sl.parallel_groups:
+        widths[len(grp)] = widths.get(len(grp), 0) + 1
+print(f"  balanced parallel groups by width: {widths}")
+
+print("\n== (c) arenas (§3.2) ==")
+tot_reuse = sum(p.reuse_hits for p in plan.arena_plans.values())
+print(f"  arenas: {len(plan.arena_plans)}  in-branch reuse hits: "
+      f"{tot_reuse}")
+print(f"  sum-of-arenas {plan.sum_arena_sizes()/1024:.0f} KiB -> "
+      f"pooled {plan.pooled_arena_peak()/1024:.0f} KiB")
+
+print("\n== (d) schedule vs memory budget (§3.3) ==")
+for budget in (2 << 20, 16 << 20, 1 << 30):
+    p = compile_plan(graph, ParallaxConfig(budget=budget))
+    print(f"  budget {budget/2**20:7.1f} MiB -> max width "
+          f"{p.schedule.max_width()}, parallel layers "
+          f"{p.schedule.num_parallel_layers()}, admitted peak "
+          f"{p.scheduled_parallel_peak()/2**20:.2f} MiB")
+print("\ntighter budgets serialize execution instead of risking OOM —")
+print("the paper's resource-constrained scheduling in action.")

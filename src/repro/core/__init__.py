@@ -1,0 +1,39 @@
+"""Parallax core: the paper's §3 algorithms as a composable library.
+
+Public API:
+
+    from repro.core import (GraphBuilder, compile_plan, ParallaxConfig,
+                            PlanExecutor)
+
+    g = ...  # build or export a DAG
+    plan = compile_plan(g, ParallaxConfig())
+    out = PlanExecutor(plan, mode="parallax")(inputs)
+"""
+
+from .arena import (ArenaPlan, BumpAllocator, SlabPool, plan_branch_arena,
+                    plan_global_arena)
+from .balance import DEFAULT_BETA, LayerGroups, balance_ratio, group_layer
+from .classify import (Branch, annotate_workloads, branch_dependencies,
+                       classify_nodes, extract_branches)
+from .executor import ArenaExecutor, PlanExecutor, RunResult, make_subgraph_fn
+from .flops import (attention_flops, conv2d_flops, elementwise_flops,
+                    matmul_flops, misc_flops, pooling_flops, ssd_scan_flops)
+from .graph import (Dim, Graph, GraphBuilder, Node, Tensor, TensorSpec,
+                    fuse_region, region_boundary_tensors,
+                    MERGER, SEQUENTIAL, SPLITTER, SPLIT_MERGE)
+from .layers import build_layers, validate_layers
+from .liveness import (Lifetime, branch_peak_memory, lifetimes_overlap,
+                       peak_memory_bruteforce, peak_memory_linear_scan,
+                       tensor_lifetimes)
+from .partition import (CostModel, HardwareProfile, MOBILE_SOC, TPU_V5E,
+                        PartitionReport, assign_epochs, candidate_regions,
+                        candidate_regions_epoch,
+                        partition_graph)
+from .pipeline import (MOBILE_CONFIG, TPU_CONFIG, ParallaxConfig,
+                       compile_plan)
+from .plan import ExecutionPlan, GraphStats, graph_stats
+from .scheduler import (Schedule, ScheduledLayer, greedy_select,
+                        memory_budget, query_available_memory,
+                        schedule_layers)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

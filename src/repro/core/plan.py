@@ -1,0 +1,95 @@
+"""ExecutionPlan — the artifact produced by the Parallax pipeline.
+
+Bundles every §3 output: partitioned graph, branches with workload
+metadata, layers, balanced groups, arena plans, and the resource-
+constrained schedule, plus the graph statistics the paper reports in
+Table 7 (Nodes / Layers / Par-Layers / Max-Branches).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .arena import ArenaPlan
+from .balance import LayerGroups
+from .classify import Branch
+from .graph import Graph
+from .partition import PartitionReport
+from .scheduler import Schedule
+
+
+@dataclass
+class GraphStats:
+    """Table 7 row: structure + parallelism statistics of one graph."""
+
+    nodes: int = 0
+    layers: int = 0
+    parallel_layers: int = 0     # layers with >= 2 mutually-independent branches
+    max_branches: int = 0        # widest layer
+
+    def as_row(self):
+        return (self.nodes, self.layers, self.parallel_layers,
+                self.max_branches)
+
+
+@dataclass
+class ExecutionPlan:
+    graph: Graph
+    branches: "dict[int, Branch]"
+    layers: "list[list[int]]"                 # branch ids per layer
+    layer_groups: "list[LayerGroups]"         # after §3.1 refinement
+    arena_plans: "dict[int, ArenaPlan]"       # per-branch arenas (§3.2)
+    schedule: Schedule                        # §3.3 greedy schedule
+    partition_report: "PartitionReport | None" = None
+    stats_pre: "GraphStats | None" = None     # original graph ("Pre")
+    stats_post: "GraphStats | None" = None    # after delegation ("Post")
+    stats_parallax: "GraphStats | None" = None
+    attrs: dict = field(default_factory=dict)
+
+    # -- memory accounting (Tables 4/5) ------------------------------------
+
+    def sum_arena_sizes(self) -> int:
+        """Branch-isolated footprint with in-branch reuse, no slab sharing."""
+        return sum(p.size for p in self.arena_plans.values())
+
+    def pooled_arena_peak(self) -> int:
+        """Footprint with §3.2 cross-arena sharing: simulate the schedule
+        acquiring/releasing slabs from one SlabPool."""
+        from .arena import SlabPool
+        pool = SlabPool()
+        for sl in self.schedule.layers:
+            live = []
+            for group in sl.parallel_groups:
+                slabs = [pool.acquire(self.arena_plans[b].size)
+                         for b in group]
+                live.extend(slabs)
+            for bid in sl.sequential:
+                s = pool.acquire(self.arena_plans[bid].size)
+                pool.release(s)    # sequential branch frees immediately
+            for s in live:
+                pool.release(s)
+        return pool.peak_bytes
+
+    def scheduled_parallel_peak(self) -> int:
+        """Worst-case concurrent memory the §3.3 schedule admits — must be
+        <= budget (asserted by tests)."""
+        peak = 0
+        for sl in self.schedule.layers:
+            for group in sl.parallel_groups:
+                peak = max(peak, sum(self.branches[b].peak_memory
+                                     for b in group))
+        return peak
+
+
+def graph_stats(graph: Graph) -> GraphStats:
+    """Compute Table 7 statistics for any graph (Pre/Post/Parallax)."""
+    from .classify import annotate_workloads, classify_nodes, extract_branches
+    from .layers import build_layers
+
+    labels = classify_nodes(graph)
+    branches = extract_branches(graph, labels)
+    annotate_workloads(graph, branches)
+    layers = build_layers(graph, branches)
+    par_layers = sum(1 for l in layers if len(l) >= 2)
+    max_br = max((len(l) for l in layers), default=0)
+    return GraphStats(graph.num_nodes(), len(layers), par_layers, max_br)

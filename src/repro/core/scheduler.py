@@ -1,0 +1,121 @@
+"""Resource-constrained parallel scheduling — paper §3.3.
+
+At runtime Parallax queries the OS for available free memory, keeps a
+30–50 % safety margin, and within each layer greedily selects the largest
+subset of branches whose combined estimated peak memory fits the budget:
+
+    Σ_{b_i ∈ chosen} M_i <= M_budget
+
+Unselected branches run sequentially — OOM-free while maximizing safe
+concurrency.  A ``max_parallel`` cap models the paper's thread ceiling
+(Fig. 3; 6 threads in their experiments — our TPU adaptation uses it as
+the branch-batch width of the fused kernels).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+DEFAULT_MARGIN = 0.4      # paper: 30-50 % safety margin
+DEFAULT_MAX_PARALLEL = 6  # paper §4.3: max thread count 6
+
+
+def query_available_memory() -> int:
+    """Free system memory in bytes (/proc/meminfo MemAvailable)."""
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:  # pragma: no cover - non-Linux fallback
+        pass
+    return 8 << 30
+
+
+def memory_budget(available: "int | None" = None,
+                  margin: float = DEFAULT_MARGIN) -> int:
+    """M_budget = free memory with a 30–50 % safety margin withheld."""
+    if not 0.0 <= margin < 1.0:
+        raise ValueError(f"margin must be in [0, 1), got {margin}")
+    if available is None:
+        available = query_available_memory()
+    return int(available * (1.0 - margin))
+
+
+def greedy_select(peak_mems: "dict[int, int]", candidates: "list[int]",
+                  budget: int, max_parallel: int = DEFAULT_MAX_PARALLEL):
+    """Largest-cardinality subset under the memory budget.
+
+    Sorting by ascending M_i and absorbing while the running sum fits
+    yields a maximum-cardinality feasible subset (exchange argument: any
+    feasible subset can be rebuilt from the smallest items).
+    Returns ``(chosen, deferred)`` preserving determinism by (M_i, id).
+    """
+    order = sorted(candidates, key=lambda b: (peak_mems[b], b))
+    chosen: list[int] = []
+    total = 0
+    for bid in order:
+        if len(chosen) >= max_parallel:
+            break
+        m = peak_mems[bid]
+        if total + m <= budget:
+            chosen.append(bid)
+            total += m
+    deferred = [b for b in candidates if b not in chosen]
+    return sorted(chosen), sorted(deferred)
+
+
+@dataclass
+class ScheduledLayer:
+    layer_index: int
+    parallel_groups: "list[list[int]]" = field(default_factory=list)
+    sequential: "list[int]" = field(default_factory=list)
+
+    def width(self) -> int:
+        return max((len(g) for g in self.parallel_groups), default=1)
+
+    def all_branches(self) -> "list[int]":
+        out = [b for g in self.parallel_groups for b in g]
+        out.extend(self.sequential)
+        return out
+
+
+@dataclass
+class Schedule:
+    layers: "list[ScheduledLayer]" = field(default_factory=list)
+    budget: int = 0
+    max_parallel: int = DEFAULT_MAX_PARALLEL
+
+    def max_width(self) -> int:
+        return max((l.width() for l in self.layers), default=1)
+
+    def num_parallel_layers(self) -> int:
+        return sum(1 for l in self.layers if l.width() > 1)
+
+
+def schedule_layers(layer_groups, peak_mems: "dict[int, int]",
+                    budget: "int | None" = None,
+                    margin: float = DEFAULT_MARGIN,
+                    max_parallel: int = DEFAULT_MAX_PARALLEL) -> Schedule:
+    """Greedy layer scheduling over the refined layer structure.
+
+    ``layer_groups`` is a list of ``balance.LayerGroups`` (one per layer).
+    Each balanced group is admitted through :func:`greedy_select`; members
+    that do not fit the budget fall back to sequential execution.
+    """
+    if budget is None:
+        budget = memory_budget(margin=margin)
+    sched = Schedule(budget=budget, max_parallel=max_parallel)
+    for li, groups in enumerate(layer_groups):
+        sl = ScheduledLayer(li, sequential=list(groups.sequential))
+        for group in groups.parallel_groups:
+            chosen, deferred = greedy_select(
+                peak_mems, group, budget, max_parallel)
+            if len(chosen) >= 2:
+                sl.parallel_groups.append(chosen)
+                sl.sequential.extend(deferred)
+            else:
+                sl.sequential.extend(group)
+        sl.sequential = sorted(set(sl.sequential))
+        sched.layers.append(sl)
+    return sched

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for branch_matmul."""
+
+import jax.numpy as jnp
+
+
+def branch_matmul_ref(x, w):
+    """(G, M, K) x (G, K, N) -> (G, M, N), fp32 accumulation."""
+    out = jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(x.dtype)

@@ -1,0 +1,21 @@
+"""jit'd wrapper for decode_attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention
+from .ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
+def decode_attention_op(q, k, v, pos, cache_len, window=0, block_k=512,
+                        interpret=False):
+    return decode_attention(q, k, v, pos, cache_len, window=window,
+                            block_k=block_k, interpret=interpret)
+
+
+__all__ = ["decode_attention_op", "decode_attention_ref"]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash_attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    """q (B,H,S,D) x k,v (B,K,T,D) -> (B,H,S,D); fp32 softmax."""
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    kr = jnp.repeat(k, H // K, axis=1)
+    vr = jnp.repeat(v, H // K, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(D)
+    T = k.shape[2]
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,42 @@
+"""jit'd wrapper for ssd_scan with the models' (b, S, H, P) layout."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan
+from .ref import ssd_scan_kernel_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(x, dt, A, B, C, chunk=64, interpret=False):
+    """Models' layout: x (b,S,H,P), dt (b,S,H), A (H,), B/C (b,S,G,N).
+
+    Groups are broadcast to heads, the sequence is chunked, and the
+    Pallas kernel runs per (batch, head) plane.
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def to_kernel(t, feat):
+        # (b, S, H, F) -> (b, H, nc, chunk, F)
+        t = t.transpose(0, 2, 1, *range(3, 2 + len(feat) + 1))
+        return t.reshape((b, H, nc, chunk) + feat)
+
+    xk = to_kernel(x, (P,))
+    dtk = dt.transpose(0, 2, 1).reshape(b, H, nc, chunk)
+    Bk = to_kernel(Bh, (N,))
+    Ck = to_kernel(Ch, (N,))
+    y = ssd_scan(xk, dtk, Bk, Ck, A, interpret=interpret)
+    return y.reshape(b, H, S, P).transpose(0, 2, 1, 3)
+
+
+__all__ = ["ssd_scan_op", "ssd_scan_kernel_ref"]

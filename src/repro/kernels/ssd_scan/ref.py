@@ -1,0 +1,22 @@
+"""Oracle for the ssd_scan kernel: the models' sequential SSD recurrence."""
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_scan_ref as _seq_ref
+
+
+def ssd_scan_kernel_ref(x, dt, Bm, Cm, a):
+    """Same pre-chunked layout as the kernel; runs the exact recurrence.
+
+    x (B,H,C,L,P), dt (B,H,C,L), Bm/Cm (B,H,C,L,N), a (H,).
+    """
+    B, H, C, L, P = x.shape
+    N = Bm.shape[-1]
+    S = C * L
+    # back to (b, S, H, ...) layout of the models' reference
+    xs = x.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    dts = dt.reshape(B, H, S).transpose(0, 2, 1)
+    Bs = Bm.reshape(B, H, S, N).transpose(0, 2, 1, 3)
+    Cs = Cm.reshape(B, H, S, N).transpose(0, 2, 1, 3)
+    y, _ = _seq_ref(xs, dts, a, Bs, Cs)
+    return y.transpose(0, 2, 1, 3).reshape(B, H, C, L, P)

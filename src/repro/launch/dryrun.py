@@ -1,0 +1,411 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first initialization) — assignment MULTI-POD DRY-RUN §0.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh with ShapeDtypeStruct stand-ins (no allocation).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-3b \
+        --shape train_4k [--multi-pod] [--variant swa]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per run it records: memory_analysis (proves fit), cost_analysis (FLOPs /
+bytes for §Roofline), collective bytes parsed from the optimized HLO, and
+compile wall time, into benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>[__<variant>].json
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import runtime_flags
+from repro.models import build_model
+from repro.training import OptConfig, init_opt_state, make_train_step
+from repro.utils.hlo import (bf16_convert_artifact_bytes, collective_bytes,
+                             collective_counts)
+from repro.utils.roofline import model_flops_estimate, roofline
+from repro.utils.sharding import (abstract_params, cast_abstract_params,
+                                  inference_param_pspecs, opt_state_pspecs,
+                                  param_pspecs)
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "artifacts" / "dryrun"
+
+# long_500k applicability (DESIGN.md §4): native sub-quadratic archs run
+# as-is; pure-dense archs run the sliding-window VARIANT; the rest skip.
+LONG_NATIVE = {"mamba2-370m", "jamba-v0.1-52b", "h2o-danube-3-4b"}
+LONG_SWA_VARIANT = {"qwen2-72b", "yi-34b", "stablelm-3b"}
+LONG_SKIP = {"whisper-tiny": "decoder context 448 / encoder 1500 frames",
+             "qwen2-vl-2b": "full attention, no SWA variant assigned",
+             "dbrx-132b": "full attention, no SWA variant assigned",
+             "kimi-k2-1t-a32b": "full attention, no SWA variant assigned"}
+
+
+def _swa_variant(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, sliding_window=4096,
+                               notes=cfg.notes + " [SWA variant w=4096]")
+
+
+def plan_entry(cfg, shape, mesh, variant="", opt=False, probe=False):
+    """Build (step_fn, arg_specs, in_shardings) for one dry-run case.
+
+    ``opt=True`` enables the beyond-paper serving optimizations recorded
+    in EXPERIMENTS.md §Perf: O1 bf16 serving params, O2 expert-only MoE
+    sharding at inference, O3 flash-decode KV sequence sharding.
+    """
+    long_context = shape.name == "long_500k"
+    api = build_model(cfg, distributed=True, mesh=mesh,
+                      long_context=long_context)
+    aparams = abstract_params(api)
+    if opt and shape.kind != "train":
+        aparams = cast_abstract_params(aparams, cfg.dtype)      # O1
+        p_specs = inference_param_pspecs(aparams, mesh)         # O2
+    else:
+        p_specs = param_pspecs(aparams, mesh)
+    batch_specs = api.input_specs(shape)
+    batch_pspecs = api.batch_pspecs(shape)
+    # prune axis names not in this mesh (e.g. "pod" on single-pod)
+    axes = set(mesh.axis_names)
+
+    def prune(spec):
+        def fix(entry):
+            if entry is None:
+                return None
+            if isinstance(entry, str):
+                return entry if entry in axes else None
+            sub = tuple(a for a in entry if a in axes)
+            return sub if len(sub) > 1 else (sub[0] if sub else None)
+        return P(*[fix(e) for e in spec])
+
+    batch_pspecs = jax.tree.map(prune, batch_pspecs,
+                                is_leaf=lambda s: isinstance(s, P))
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig(
+            moment_dtype="bfloat16" if cfg.param_count() > 2e11
+            else "float32")
+        # §Perf O7: gradient accumulation divides activation memory.
+        # FLOP probes lower with micro=1: per-step totals are identical
+        # (same math) and the extra while loop would break accounting.
+        micro = 8 if (opt and not probe) else 1
+        train_step = make_train_step(api, opt_cfg, microbatches=micro)
+        aopt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), aparams)
+        o_specs = opt_state_pspecs(aopt, p_specs)
+        in_shardings = (p_specs, o_specs, batch_pspecs)
+        out_shardings = (p_specs, o_specs, None)
+        args = (aparams, aopt, batch_specs)
+        fn = train_step
+    elif shape.kind == "prefill":
+        in_shardings = (p_specs, batch_pspecs)
+        out_shardings = None
+        args = (aparams, batch_specs)
+        fn = api.prefill_fn
+    else:  # decode
+        ring = long_context and cfg.sliding_window > 0
+        acaches = jax.eval_shape(
+            lambda: api.init_caches(shape.global_batch, shape.seq_len,
+                                    jnp.dtype(cfg.dtype), ring=ring))
+        c_specs = cache_pspecs(acaches, mesh, long_context, opt=opt)
+        in_shardings = (p_specs, c_specs, batch_pspecs)
+        out_shardings = (None, c_specs)
+        args = (aparams, acaches, batch_specs)
+        fn = api.decode_fn
+        if opt and os.environ.get("REPRO_DONATE", "0") == "1":
+            # O4: donate the cache operand — in-place update, no
+            # double-buffered KV (what a real engine does every step).
+            # Iteration log: REFUTED on the CPU dry-run memory model
+            # (see EXPERIMENTS.md §Perf) — kept opt-in via REPRO_DONATE.
+            return fn, args, in_shardings, out_shardings, (1,)
+    return fn, args, in_shardings, out_shardings, ()
+
+
+def cache_pspecs(acaches, mesh, long_context, opt=False):
+    """KV/state cache sharding by leaf name (DESIGN.md §5).
+
+    Trailing-dims rules; leading stack dims (scan period, whisper L) are
+    padded with None.  Axes that do not divide a dim are dropped
+    (replicated) — e.g. batch 1 on long_500k.
+
+    ``opt=True`` (§Perf O3, flash-decode): when the KV-head count does
+    not divide the model axis (GQA kv=8 on a 16-way axis would replicate
+    the cache), shard the cache *sequence* over the model axis instead —
+    XLA turns softmax over the sharded length into partial-stat psums,
+    i.e. distributed flash-decode.
+    """
+    axes = tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def div(axis, dim):
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= sizes[a]
+        else:
+            n = sizes[axis]
+        return dim % n == 0
+
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def rule_for(name, shape):
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (..., B, T, K, D)
+            B, T, K, D = shape[-4:]
+            k_ax = "model" if div("model", K) else None
+            seq_ax = None
+            if long_context and T > 4096 and div("data", T):
+                seq_ax = "data"
+            if opt and k_ax is None and div("model", T):
+                # O3: flash-decode sequence sharding over the idle axis
+                seq_ax = (("data", "model") if seq_ax == "data"
+                          and div("model", T // sizes["data"]) else
+                          ("model" if seq_ax is None else seq_ax))
+            b_ax = dp if (dp and B > 1 and div(dp, B)
+                          and seq_ax in (None, "model")) else None
+            if b_ax is not None and seq_ax == "model":
+                b_ax = tuple(a for a in (("pod", "data"))
+                             if a in axes and div(a, B)) or None
+                if isinstance(b_ax, tuple) and len(b_ax) == 1:
+                    b_ax = b_ax[0]
+            return (b_ax, seq_ax, k_ax, None)
+        if name == "state":                    # (..., B, H, P, N)
+            B, H, _, _ = shape[-4:]
+            return (dp if (dp and B > 1 and div(dp, B)) else None,
+                    "model" if div("model", H) else None, None, None)
+        if name == "conv":                     # (..., B, W, C)
+            B, _, C = shape[-3:]
+            return (dp if (dp and B > 1 and div(dp, B)) else None, None,
+                    "model" if div("model", C) else None)
+        if name == "pos":
+            return (None,)
+        return tuple([None] * len(shape))
+
+    def per_leaf(path, leaf):
+        name = ""
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = str(e.key)
+                break
+        rule = rule_for(name, leaf.shape)
+        pad = (None,) * (leaf.ndim - len(rule))
+        return P(*(pad + rule))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, acaches)
+
+
+def _lower_and_measure(cfg, shape, mesh, variant, unroll, opt=False,
+                       probe=False):
+    """One lowering pass.  Returns (flops, bytes, coll_bytes, counts,
+    mem_dict, t_lower, t_compile)."""
+    runtime_flags.scan_unroll = unroll
+    runtime_flags.chunked_attention = opt      # §Perf O5
+    # O6 (shard_ssm_heads) measured and REFUTED — see EXPERIMENTS.md §Perf
+    runtime_flags.shard_ssm_heads = (
+        opt and os.environ.get("REPRO_SSM_HEADS", "0") == "1")
+    try:
+        t0 = time.time()
+        fn, args, in_sh, out_sh, donate = plan_entry(
+            cfg, shape, mesh, variant, opt=opt, probe=probe)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    finally:
+        runtime_flags.scan_unroll = False
+        runtime_flags.chunked_attention = False
+        runtime_flags.shard_ssm_heads = False
+    mem_dict = {
+        "argument_size_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_size_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_size_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "generated_code_size_bytes": int(
+            getattr(mem, "generated_code_size_in_bytes", 0)),
+        # CPU-backend bf16->f32 dot-operand conversions (absent on TPU)
+        "cpu_bf16_convert_artifact_bytes":
+            int(bf16_convert_artifact_bytes(hlo)),
+    }
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            collective_bytes(hlo), collective_counts(hlo),
+            mem_dict, t_lower, t_compile)
+
+
+def _layer_probe_cfgs(cfg):
+    """Derived configs with 1 and 2 scan periods for exact extrapolation.
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so a rolled layer scan understates FLOPs/collectives by
+    ~n_rep.  We lower the same architecture with prefix+1 and prefix+2
+    periods *unrolled* (cheap — tiny HLO) and extrapolate:
+        total = F(1p) + (n_rep - 1) * (F(2p) - F(1p)).
+    This is exact for the layer stack, the embed/head (counted once in
+    F(1p)) and the optimizer (per-layer params land in the delta).
+    """
+    import dataclasses
+    from repro.models.blocks import block_pattern, split_pattern
+    if cfg.is_encoder_decoder:
+        # whisper: 4+4 layers — fully unrolled probe is exact on its own
+        return None, None, 1
+    pattern = block_pattern(cfg)
+    prefix, period = split_pattern(pattern)
+    n_rep = (cfg.num_layers - prefix) // period
+    if n_rep <= 2:
+        return None, None, n_rep
+    c1 = dataclasses.replace(cfg, num_layers=prefix + period)
+    c2 = dataclasses.replace(cfg, num_layers=prefix + 2 * period)
+    return c1, c2, n_rep
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "", save: bool = True,
+             probe_flops: "bool | None" = None, opt: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    if opt:
+        variant = (variant + "+opt").lstrip("+")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "variant": variant, "status": "ok"}
+    if probe_flops is None:
+        probe_flops = not multi_pod      # roofline table is single-pod only
+
+    if shape_name == "long_500k":
+        if arch in LONG_SKIP:
+            rec.update(status="skipped", reason=LONG_SKIP[arch])
+            if save:
+                _save(rec)
+            print(f"[skip] {arch} x {shape_name}: {LONG_SKIP[arch]}")
+            return rec
+        if arch in LONG_SWA_VARIANT:
+            cfg = _swa_variant(cfg)
+            variant = ("swa+opt" if opt else "swa")
+            rec["variant"] = variant
+    if variant.startswith("swa") and cfg.sliding_window == 0:
+        cfg = _swa_variant(cfg)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    try:
+        with jax.sharding.set_mesh(mesh):
+            # (A) full model, rolled scan: memory proof + compile time
+            (flops_a, bytes_a, coll_a, counts_a, mem_dict,
+             t_lower, t_compile) = _lower_and_measure(
+                cfg, shape, mesh, variant, unroll=False, opt=opt)
+
+            c1, c2, n_rep = _layer_probe_cfgs(cfg)
+            if probe_flops and c1 is not None:
+                # (B)/(C) 1- and 2-period probes, unrolled: exact totals
+                f1, b1, cl1, _, _, _, _ = _lower_and_measure(
+                    c1, shape, mesh, variant, unroll=True, opt=opt,
+                    probe=True)
+                f2, b2, cl2, _, _, _, _ = _lower_and_measure(
+                    c2, shape, mesh, variant, unroll=True, opt=opt,
+                    probe=True)
+                flops = f1 + (n_rep - 1) * (f2 - f1)
+                bytes_acc = b1 + (n_rep - 1) * (b2 - b1)
+                coll = {k: cl1.get(k, 0) + (n_rep - 1)
+                        * (cl2.get(k, 0) - cl1.get(k, 0))
+                        for k in set(cl1) | set(cl2)}
+                rec["flops_accounting"] = "probe-extrapolated"
+            elif probe_flops:
+                # shallow model: one fully-unrolled lowering is exact
+                flops, bytes_acc, coll, _, _, _, _ = _lower_and_measure(
+                    cfg, shape, mesh, variant, unroll=True, opt=opt,
+                    probe=True)
+                rec["flops_accounting"] = "unrolled-exact"
+            else:
+                flops, bytes_acc, coll = flops_a, bytes_a, coll_a
+                rec["flops_accounting"] = "rolled-raw (loop body once)"
+    except Exception as e:  # a failure here is a bug in our sharding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if save:
+            _save(rec)
+        print(f"[FAIL] {arch} x {shape_name} ({mesh_tag}): {e}")
+        return rec
+
+    mf = model_flops_estimate(cfg, shape)
+    rl = roofline(flops, bytes_acc, coll.get("total", 0), chips,
+                  model_flops=mf)
+
+    rec.update(
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        chips=chips, memory_analysis=mem_dict,
+        cost_analysis={"flops": flops, "bytes_accessed": bytes_acc,
+                       "flops_rolled_raw": flops_a,
+                       "bytes_rolled_raw": bytes_a},
+        collective_bytes=coll, collective_counts=counts_a,
+        roofline=rl.row(),
+    )
+    per_dev_gb = (mem_dict["argument_size_bytes"]
+                  + mem_dict["temp_size_bytes"]) / 2**30
+    rec["per_device_gb"] = round(per_dev_gb, 3)
+    # the bf16->f32 convert artifact applies to bf16-resident *serving*
+    # weights; training keeps fp32 masters (no such converts on TPU
+    # either way, but the detector can misfire on grad-accum loops)
+    artifact = (mem_dict["cpu_bf16_convert_artifact_bytes"]
+                if shape.kind != "train" else 0)
+    corrected = per_dev_gb - artifact / 2**30
+    rec["per_device_gb_tpu_corrected"] = round(max(corrected, 0.0), 3)
+    print(f"[ok] {arch} x {shape_name} ({mesh_tag}{'/' + variant if variant else ''}): "
+          f"compile {t_compile:.1f}s, {per_dev_gb:.2f} GiB/dev "
+          f"({rec['per_device_gb_tpu_corrected']:.2f} corrected), "
+          f"dominant={rl.dominant}, "
+          f"terms=({rl.compute_s:.4f}, {rl.memory_s:.4f}, "
+          f"{rl.collective_s:.4f})s, useful={rl.useful_flops_ratio:.2f}")
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec):
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    tag = "__".join(x for x in (rec["arch"], rec["shape"], rec["mesh"],
+                                rec.get("variant", "")) if x)
+    (ARTIFACTS / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="", choices=["", "swa"])
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper serving optimizations (§Perf)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for the chosen mesh")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = 0
+        for arch in sorted(ARCHS):
+            for shape in ("train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"):
+                rec = run_case(arch, shape, args.multi_pod)
+                failures += rec["status"] == "error"
+        raise SystemExit(1 if failures else 0)
+
+    if not args.arch or not args.shape:
+        raise SystemExit("need --arch and --shape (or --all)")
+    rec = run_case(args.arch, args.shape, args.multi_pod, args.variant)
+    raise SystemExit(1 if rec["status"] == "error" else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
+        --steps 100 [--reduced] [--batch 8] [--seq 128] [--ckpt out/]
+
+On this container (1 CPU device) use ``--reduced``; on a real pod the
+same script shards params/optimizer per utils/sharding rules over
+``make_production_mesh()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import SyntheticTokens, as_global_array
+from repro.models import build_model
+from repro.training import OptConfig, init_opt_state, make_train_step
+from repro.training.checkpoint import save_checkpoint
+
+
+def train(arch: str, steps: int = 100, batch: int = 8, seq: int = 128,
+          reduced: bool = True, lr: float = 3e-3, ckpt: "str | None" = None,
+          log_every: int = 10, seed: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(seed))
+    opt_cfg = OptConfig(lr=lr, warmup_steps=min(20, steps // 5 + 1))
+    opt_state = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(api, opt_cfg), donate_argnums=(0, 1))
+
+    data = SyntheticTokens(cfg.vocab_size, seq, batch, seed=seed)
+    losses = []
+    t0 = time.time()
+    for step, host_batch in zip(range(steps), data):
+        batch_arrays = {k: jnp.asarray(v) for k, v in host_batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             batch_arrays)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:4d}  loss {loss:7.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):8.3f}  "
+                  f"({dt:.1f}s)", flush=True)
+    if ckpt:
+        save_checkpoint(ckpt, params, opt_state, step=steps,
+                        metadata={"arch": arch, "final_loss": losses[-1]})
+        print(f"checkpoint written to {ckpt}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    losses = train(args.arch, args.steps, args.batch, args.seq,
+                   args.reduced, args.lr, args.ckpt)
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

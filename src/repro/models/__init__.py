@@ -1,0 +1,7 @@
+"""Pure-JAX model zoo: every assigned architecture behind one API."""
+
+from .model import (ModelAPI, build_model, stub_audio_frontend,
+                    stub_vision_frontend)
+
+__all__ = ["ModelAPI", "build_model", "stub_audio_frontend",
+           "stub_vision_frontend"]

@@ -1,0 +1,283 @@
+"""Attention: GQA / MHA / sliding-window, prefill + single-token decode.
+
+Shapes (B = batch, S = query len, T = kv len, H = q heads, K = kv heads,
+D = head_dim):
+
+    q: (B, S, H, D)    k, v: (B, T, K, D)
+
+GQA repeats each kv head over ``H // K`` query heads via reshape (no
+materialized repeat).  The pure-jnp path here is the reference; the Pallas
+flash kernels in ``repro.kernels`` implement the same contract for the
+TPU-optimized path and are validated against this module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import apply_mrope, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd)),
+        "wk": dense_init(ks[1], (d, K * hd)),
+        "wv": dense_init(ks[2], (d, K * hd)),
+        "wo": dense_init(ks[3], (H * hd, d)),
+    }
+    if cfg.qkv_bias:  # Qwen2 family uses QKV bias (arXiv:2407.10671)
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((K * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((K * hd,), jnp.float32)
+    return p
+
+
+def qkv_project(params, cfg, x, positions=None, positions3=None):
+    """x: (B, S, d) -> q (B,S,H,D), k/v (B,S,K,D) with RoPE applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    dt = x.dtype
+
+    def proj(w, b, nh):
+        y = jnp.einsum("bsd,df->bsf", x, w.astype(dt))
+        if b is not None:
+            y = y + b.astype(dt)
+        return y.reshape(B, S, nh, hd)
+
+    q = proj(params["wq"], params.get("bq"), H)
+    k = proj(params["wk"], params.get("bk"), K)
+    v = proj(params["wv"], params.get("bv"), K)
+
+    if cfg.mrope_sections:
+        assert positions3 is not None, "M-RoPE needs 3-stream positions"
+        q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """(B,S,H,D) x (B,T,K,D) -> (B,K,G,S,T) with G = H // K."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(D)
+
+
+def _gqa_context(p, v):
+    """(B,K,G,S,T) x (B,T,K,D) -> (B,S,H,D)."""
+    B, K, G, S, T = p.shape
+    D = v.shape[-1]
+    ctx = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return ctx.reshape(B, S, K * G, D)
+
+
+def causal_mask(S: int, T: int, q_offset=0, window: int = 0):
+    """(S, T) boolean mask. ``window`` > 0 adds sliding-window locality."""
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def attend(q, k, v, mask=None):
+    """Masked softmax attention with GQA grouping; fp32 softmax."""
+    s = _gqa_scores(q, k).astype(jnp.float32)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_context(p.astype(q.dtype), v)
+
+
+def attend_chunked(q, k, v, *, causal=True, window=0, q_offset=0,
+                   chunk_q=512, chunk_k=1024):
+    """Exact chunked attention (online softmax over tiles).
+
+    Same contract as :func:`attend` with a causal/window mask, but the
+    (S, T) score matrix is never materialized: live memory is one
+    (chunk_q, chunk_k) tile per (B, K, G).  This is the pure-JAX analogue
+    of the Pallas flash kernel (repro.kernels.flash_attention) and what
+    the compiled HLO of the dry-run's --opt mode measures.
+    """
+    B, S, H, D = q.shape
+    _, T, K, _ = k.shape
+    G = H // K
+    cq = min(chunk_q, S)
+    ck = min(chunk_k, T)
+    assert S % cq == 0 and T % ck == 0, (S, T, cq, ck)
+    nq, nk = S // cq, T // ck
+    scale = 1.0 / np.sqrt(D)
+
+    qs = jnp.moveaxis(q.reshape(B, nq, cq, K, G, D), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, ck, K, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, ck, K, D), 1, 0)
+
+    def outer(_, q_in):
+        qc, qi = q_in                                  # (B,cq,K,G,D)
+        qf = qc.astype(jnp.float32) * scale
+        m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, cq, D), jnp.float32)
+
+        def inner(st, k_in):
+            m, l, acc = st
+            kc, vc, ki = k_in
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qf,
+                           kc.astype(jnp.float32))
+            qpos = (qi * cq + jnp.arange(cq) + q_offset)[:, None]
+            kpos = (ki * ck + jnp.arange(ck))[None, :]
+            msk = jnp.ones((cq, ck), bool)
+            if causal:
+                msk &= kpos <= qpos
+            if window > 0:
+                msk &= kpos > qpos - window
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = (acc * alpha[..., None]
+                   + jnp.einsum("bkgqt,btkd->bkgqd", p,
+                                vc.astype(jnp.float32)))
+            return (m_new, l, acc), None
+
+        # checkpoint the tile body: without it autodiff saves every
+        # (cq, ck) probability tile — re-materializing the S x S matrix
+        # the chunking exists to avoid (flash backward recomputes tiles)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(inner), (m0, l0, a0),
+                                      (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,K,G,cq,D)
+        return None, jnp.moveaxis(out, 3, 1)           # (B,cq,K,G,D)
+
+    _, outs = jax.lax.scan(outer, None, (qs, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, K * G, D)
+    return out.astype(q.dtype)
+
+
+def self_attention(params, cfg, x, positions=None, positions3=None,
+                   causal=True, window: "int | None" = None):
+    """Full prefill/training self-attention over x: (B, S, d)."""
+    from . import runtime_flags
+
+    S = x.shape[1]
+    q, k, v = qkv_project(params, cfg, x, positions, positions3)
+    w = cfg.sliding_window if window is None else window
+    if (runtime_flags.chunked_attention and causal
+            and S >= 2 * runtime_flags.chunk_q
+            and S % runtime_flags.chunk_q == 0
+            and S % runtime_flags.chunk_k == 0):
+        ctx = attend_chunked(q, k, v, causal=True, window=w,
+                             chunk_q=runtime_flags.chunk_q,
+                             chunk_k=runtime_flags.chunk_k)
+    else:
+        mask = causal_mask(S, S, 0, w) if causal else None
+        ctx = attend(q, k, v, mask)
+    B = x.shape[0]
+    out = jnp.einsum("bsf,fd->bsd",
+                     ctx.reshape(B, S, -1), params["wo"].astype(x.dtype))
+    return out
+
+
+def cross_attention(params, cfg, x, k, v):
+    """Decoder cross-attention: kv precomputed from the encoder."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    H = cfg.num_heads
+    q = jnp.einsum("bsd,df->bsf", x, params["wq"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    ctx = attend(q, k, v, mask=None)
+    return jnp.einsum("bsf,fd->bsd", ctx.reshape(B, S, -1),
+                      params["wo"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# decode path: single new token against a KV cache
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype,
+                  ring: bool = False):
+    """KV cache with per-slot absolute-position bookkeeping.
+
+    ``ring=True`` allocates only ``sliding_window`` slots and wraps — the
+    sub-quadratic memory path for SWA architectures on long_500k.  A full
+    cache is simply a ring that never wraps, so decode handles both
+    uniformly via the ``pos`` array.
+    """
+    hd = cfg.resolved_head_dim()
+    K = cfg.num_kv_heads
+    slots = max_len
+    if ring:
+        assert cfg.sliding_window > 0, "ring cache needs a sliding window"
+        slots = min(max_len, cfg.sliding_window)
+    shape = (batch, slots, K, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            # absolute position stored in each slot; -1 = empty
+            "pos": jnp.full((slots,), -1, jnp.int32)}
+
+
+def fill_kv_cache(cache, k, v, start: int = 0):
+    """Write a prefill segment k/v (B, S, K, D) into the cache at
+    ``start`` (absolute positions start..start+S-1; no wrapping — prefill
+    must fit the allocated slots)."""
+    S = k.shape[1]
+    out = dict(cache)
+    out["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), start, axis=1)
+    out["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), start, axis=1)
+    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.arange(start, start + S, dtype=jnp.int32),
+        start, axis=0)
+    return out
+
+
+def decode_step_attention(params, cfg, x, cache, cache_len,
+                          positions3=None, window: int = 0):
+    """One-token decode: x (B, 1, d) against cache k/v (B, slots, K, D).
+
+    ``cache_len`` (scalar, may be traced) is the number of tokens already
+    generated/prefilled; the new token has absolute position ``cache_len``
+    and is written to slot ``cache_len % slots`` (ring semantics).
+    Returns ``(out (B,1,d), new_cache)``.
+    """
+    B = x.shape[0]
+    slots = cache["k"].shape[1]
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    positions = jnp.broadcast_to(cache_len, (B, 1))
+    if positions3 is None and cfg.mrope_sections:
+        positions3 = jnp.broadcast_to(positions, (3, B, 1))
+    q, k_new, v_new = qkv_project(params, cfg, x, positions, positions3)
+
+    slot = cache_len % slots
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], cache_len[None], slot, axis=0)
+
+    valid = (pos >= 0) & (pos <= cache_len)
+    w = window or cfg.sliding_window
+    if w > 0:
+        valid &= pos > cache_len - w
+    mask = valid[None, :]                                 # (S=1, T)
+    ctx = attend(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    out = jnp.einsum("bsf,fd->bsd", ctx.reshape(B, 1, -1),
+                     params["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v, "pos": pos}

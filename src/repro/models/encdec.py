@@ -1,0 +1,208 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+The audio frontend (mel spectrogram + 2x conv subsampling) is a STUB per
+the assignment: ``input_specs`` provides precomputed frame embeddings of
+shape (B, S_enc, d).  Everything downstream — sinusoidal positions,
+bidirectional encoder, causal decoder with cross-attention, tied vocab
+head — is implemented fully.
+
+Whisper-Tiny is also one of the paper's five evaluation models (its
+multi-branch encoder layers are Parallax's flagship example, Table 6), so
+this architecture doubles as the faithful-reproduction vehicle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import runtime_flags
+from .attention import (attend, causal_mask, cross_attention,
+                        decode_step_attention, init_attention,
+                        init_kv_cache, qkv_project)
+from .common import embed_init, init_norm, make_norm, sinusoidal_positions
+from .mlp import init_mlp, mlp
+from .sharding import shard_batch_seq
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": init_norm(ks[0], cfg.d_model, cfg.norm_type),
+        "attn": init_attention(ks[1], cfg),
+        "norm2": init_norm(ks[2], cfg.d_model, cfg.norm_type),
+        "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {
+        "norm1": init_norm(ks[0], cfg.d_model, cfg.norm_type),
+        "self_attn": init_attention(ks[1], cfg),
+        "norm_x": init_norm(ks[2], cfg.d_model, cfg.norm_type),
+        "cross_attn": init_attention(ks[3], cfg),
+        "norm2": init_norm(ks[4], cfg.d_model, cfg.norm_type),
+        "mlp": init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def init_encdec(key, cfg):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model)),
+        "dec_pos": embed_init(ks[3], (4096, cfg.d_model)),
+        "enc_final": init_norm(ks[4], cfg.d_model, cfg.norm_type),
+        "dec_final": init_norm(ks[5], cfg.d_model, cfg.norm_type),
+        "encoder": jax.vmap(lambda k: _enc_block_init(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: _dec_block_init(k, cfg))(dec_keys),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, d) stub frontend embeddings -> (B, S_enc, d)."""
+    norm = make_norm(cfg.norm_type)
+    S = frames.shape[1]
+    x = frames.astype(cfg.dtype) + sinusoidal_positions(
+        S, cfg.d_model).astype(cfg.dtype)[None]
+    x = shard_batch_seq(x)
+
+    def body(x, bp):
+        h = norm(bp["norm1"], x)
+        x = x + _bidir_attention(bp["attn"], cfg, h)
+        h = norm(bp["norm2"], x)
+        x = x + mlp(bp["mlp"], h, cfg.act)
+        return shard_batch_seq(x), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"],
+                        **runtime_flags.scan_kwargs())
+    return norm(params["enc_final"], x)
+
+
+def _bidir_attention(p, cfg, x):
+    q, k, v = qkv_project(p, cfg, x)
+    ctx = attend(q, k, v, mask=None)
+    B, S = x.shape[:2]
+    return jnp.einsum("bsf,fd->bsd", ctx.reshape(B, S, -1),
+                      p["wo"].astype(x.dtype))
+
+
+def cross_kv(params_layer, cfg, enc_out):
+    """Per-layer cross-attention K/V from encoder output (computed once)."""
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim()
+    K = cfg.num_kv_heads
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,df->btf", enc_out,
+                   params_layer["wk"].astype(dt)).reshape(B, T, K, hd)
+    v = jnp.einsum("btd,df->btf", enc_out,
+                   params_layer["wv"].astype(dt)).reshape(B, T, K, hd)
+    return k, v
+
+
+def decode_train(params, cfg, tokens, enc_out):
+    """Teacher-forced decoder forward.  Returns hidden (B, S, d)."""
+    norm = make_norm(cfg.norm_type)
+    B, S = tokens.shape
+    x = (params["embed"].astype(cfg.dtype)[tokens]
+         + params["dec_pos"].astype(cfg.dtype)[None, :S])
+    x = shard_batch_seq(x)
+    mask = causal_mask(S, S)
+
+    def body(x, bp):
+        h = norm(bp["norm1"], x)
+        q, k, v = qkv_project(bp["self_attn"], cfg, h)
+        ctx = attend(q, k, v, mask)
+        x = x + jnp.einsum("bsf,fd->bsd", ctx.reshape(B, S, -1),
+                           bp["self_attn"]["wo"].astype(x.dtype))
+        h = norm(bp["norm_x"], x)
+        ck, cv = cross_kv(bp["cross_attn"], cfg, enc_out)
+        x = x + cross_attention(bp["cross_attn"], cfg, h, ck, cv)
+        h = norm(bp["norm2"], x)
+        x = x + mlp(bp["mlp"], h, cfg.act)
+        return shard_batch_seq(x), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["decoder"],
+                        **runtime_flags.scan_kwargs())
+    return norm(params["dec_final"], x)
+
+
+def encdec_loss(params, cfg, frames, tokens, labels):
+    enc = encode(params, cfg, frames)
+    hidden = decode_train(params, cfg, tokens, enc)
+    w = params["embed"].astype(hidden.dtype)
+    logits = jnp.einsum("bsd,vd->bsv", hidden, w)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss, {"ce": loss}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def init_dec_caches(cfg, batch, max_len, dtype):
+    """Self-attention caches per decoder layer + cross K/V slots."""
+    hd = cfg.resolved_head_dim()
+    K = cfg.num_kv_heads
+    L = cfg.num_layers
+    self_c = init_kv_cache(cfg, batch, max_len, dtype)
+    return {
+        "self": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape), self_c),
+        "cross_k": jnp.zeros((L, batch, cfg.encoder_seq, K, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.encoder_seq, K, hd), dtype),
+    }
+
+
+def prefill_encdec(params, cfg, frames, caches):
+    """Encoder pass + cross-KV computation (the serving prefill)."""
+    enc = encode(params, cfg, frames)
+
+    def per_layer(bp):
+        return cross_kv(bp["cross_attn"], cfg, enc)
+
+    ck, cv = jax.vmap(per_layer, in_axes=0)(params["decoder"])
+    caches = dict(caches)
+    caches["cross_k"] = ck.astype(caches["cross_k"].dtype)
+    caches["cross_v"] = cv.astype(caches["cross_v"].dtype)
+    return enc, caches
+
+
+def decode_step_encdec(params, cfg, caches, tokens, cache_len):
+    """One decoder token.  tokens: (B, 1) -> (logits (B, V), caches)."""
+    norm = make_norm(cfg.norm_type)
+    B = tokens.shape[0]
+    pos = jnp.asarray(cache_len, jnp.int32)
+    x = (params["embed"].astype(cfg.dtype)[tokens]
+         + jax.lax.dynamic_slice_in_dim(
+             params["dec_pos"].astype(cfg.dtype), pos, 1, axis=0)[None])
+
+    def body(x, scanned):
+        bp, self_cache, ck, cv = scanned
+        h = norm(bp["norm1"], x)
+        y, self_cache = decode_step_attention(bp["self_attn"], cfg, h,
+                                              self_cache, cache_len)
+        x = x + y
+        h = norm(bp["norm_x"], x)
+        x = x + cross_attention(bp["cross_attn"], cfg, h,
+                                ck.astype(x.dtype), cv.astype(x.dtype))
+        h = norm(bp["norm2"], x)
+        x = x + mlp(bp["mlp"], h, cfg.act)
+        return x, self_cache
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], caches["self"],
+                  caches["cross_k"], caches["cross_v"]),
+        **runtime_flags.scan_kwargs())
+    hidden = norm(params["dec_final"], x)[:, -1, :]
+    logits = jnp.einsum("bd,vd->bv", hidden,
+                        params["embed"].astype(hidden.dtype))
+    caches = dict(caches)
+    caches["self"] = new_self
+    return logits, caches

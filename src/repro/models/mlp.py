@@ -1,0 +1,34 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and plain GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import activation, dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # SwiGLU: gate + up + down
+        return {"w_gate": dense_init(ks[0], (d_model, d_ff)),
+                "w_up": dense_init(ks[1], (d_model, d_ff)),
+                "w_down": dense_init(ks[2], (d_ff, d_model))}
+    return {"w_up": dense_init(ks[0], (d_model, d_ff)),
+            "b_up": jnp.zeros((d_ff,), jnp.float32),
+            "w_down": dense_init(ks[1], (d_ff, d_model)),
+            "b_down": jnp.zeros((d_model,), jnp.float32)}
+
+
+def mlp(params, x, act: str):
+    f = activation(act)
+    dt = x.dtype
+    if "w_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+        return jnp.einsum("...f,fd->...d", f(g) * u,
+                          params["w_down"].astype(dt))
+    h = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+    h = f(h + params["b_up"].astype(dt))
+    return (jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dt))
+            + params["b_down"].astype(dt))

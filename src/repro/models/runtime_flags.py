@@ -1,0 +1,31 @@
+"""Process-wide model-lowering flags.
+
+``scan_unroll``: when truthy, ``lax.scan`` over layers is unrolled by this
+factor (``True`` = fully).  The dry-run sets it to ``True`` because XLA's
+``cost_analysis`` counts a while-loop body once regardless of trip count,
+which would understate HLO_FLOPs by ~num_layers; unrolling makes the
+roofline FLOP/byte terms exact at the price of a bigger HLO.
+Training/serving entry points keep the rolled scan (small HLO, fast
+compile).
+"""
+
+scan_unroll = False
+
+# §Perf O5: chunked (flash-style) attention for long-sequence train /
+# prefill — exact online softmax over (q-chunk, kv-chunk) tiles so the
+# S x S score matrix is never materialized.  Enabled by the dry-run's
+# --opt mode and by launch entry points for big sequences.
+chunked_attention = False
+chunk_q = 512
+chunk_k = 1024
+
+# §Perf O6: constrain Mamba/SSD head tensors to the model axis — without
+# it the inter-chunk scan gathers full-sequence fp32 state tensors onto
+# every device (jamba train_4k hillclimb).
+shard_ssm_heads = False
+
+
+def scan_kwargs():
+    if scan_unroll:
+        return {"unroll": True}
+    return {}

@@ -1,0 +1,99 @@
+"""KV-cache memory management — paper §3.2/§3.3 applied to serving.
+
+The serving engine's HBM picture mirrors the paper's mobile-RAM picture:
+
+* *shape inference*: per-request peak cache bytes are computed statically
+  from the model config and requested context length,
+* *arena isolation*: each admitted request's caches live in their own
+  slab (no cross-request reallocation when a request finishes early),
+* *cross-arena reuse*: finished requests' slabs return to a
+  :class:`repro.core.arena.SlabPool` and back later requests' arenas.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.core.arena import SlabPool
+
+
+def kv_bytes_per_token(cfg) -> int:
+    """Per-token, per-sequence KV bytes (the shape-inference step)."""
+    hd = cfg.resolved_head_dim()
+    itemsize = 2 if cfg.dtype == "bfloat16" else 4
+    total = 0
+    for i in range(cfg.num_layers):
+        if cfg.is_attn_layer(i):
+            total += 2 * cfg.num_kv_heads * hd * itemsize
+    return total
+
+
+def state_bytes(cfg) -> int:
+    """Per-sequence constant state bytes (SSM state + conv window)."""
+    if cfg.ssm.d_state == 0:
+        return 0
+    d_inner = cfg.ssm.expand * cfg.d_model
+    nheads = d_inner // cfg.ssm.head_dim
+    conv_dim = d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    n_ssm = sum(1 for i in range(cfg.num_layers)
+                if not cfg.is_attn_layer(i))
+    per_layer = (nheads * cfg.ssm.head_dim * cfg.ssm.d_state * 4
+                 + (cfg.ssm.conv_width - 1) * conv_dim * 2)
+    return n_ssm * per_layer
+
+
+def request_peak_bytes(cfg, context_len: int) -> int:
+    """M_i of one request (paper §3.3 branch peak-memory estimate)."""
+    attn_len = context_len
+    if cfg.sliding_window:
+        attn_len = min(context_len, cfg.sliding_window)
+    return kv_bytes_per_token(cfg) * attn_len + state_bytes(cfg)
+
+
+@dataclass
+class CacheLease:
+    request_id: int
+    slab_id: int
+    nbytes: int
+
+
+class KVCacheManager:
+    """Slab-pooled per-request cache accounting under an HBM budget."""
+
+    def __init__(self, cfg, budget_bytes: int):
+        self.cfg = cfg
+        self.budget = budget_bytes
+        self.pool = SlabPool()
+        self.leases: dict[int, CacheLease] = {}
+        self._slabs: dict[int, object] = {}
+
+    def can_admit(self, context_len: int) -> bool:
+        need = request_peak_bytes(self.cfg, context_len)
+        return self.pool.in_use + need <= self.budget
+
+    def admit(self, request_id: int, context_len: int) -> CacheLease:
+        need = request_peak_bytes(self.cfg, context_len)
+        if self.pool.in_use + need > self.budget:
+            raise MemoryError(
+                f"request {request_id}: {need} bytes exceeds budget head"
+                f"room ({self.budget - self.pool.in_use})")
+        slab = self.pool.acquire(need)
+        lease = CacheLease(request_id, slab.id, slab.size)
+        self.leases[request_id] = lease
+        self._slabs[request_id] = slab
+        return lease
+
+    def release(self, request_id: int) -> None:
+        slab = self._slabs.pop(request_id)
+        self.pool.release(slab)
+        del self.leases[request_id]
+
+    @property
+    def in_use(self) -> int:
+        return self.pool.in_use
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.pool.peak_bytes

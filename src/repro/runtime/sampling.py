@@ -1,0 +1,23 @@
+"""Token sampling for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    """(B, V) -> (B,) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits, key, temperature: float = 1.0, top_k: int = 0):
+    """Temperature / top-k sampling.  (B, V) -> (B,)."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,71 @@
+"""npz-based pytree checkpointing (orbax-free, offline-friendly)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in ("bfloat16", "float16"):
+            # npz has no bf16: store widened; restore casts back via the
+            # template dtype
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out, treedef
+
+
+def save_checkpoint(path, params, opt_state=None, step: int = 0,
+                    metadata: "dict | None" = None) -> None:
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(params)
+    np.savez(path / "params.npz", **flat)
+    if opt_state is not None:
+        flat_o, _ = _flatten(opt_state)
+        np.savez(path / "opt_state.npz", **flat_o)
+    meta = {"step": step, **(metadata or {})}
+    (path / "meta.json").write_text(json.dumps(meta, indent=2))
+
+
+def load_checkpoint(path, params_template, opt_template=None):
+    """Restores into the structure of the provided templates."""
+    path = Path(path)
+    meta = json.loads((path / "meta.json").read_text())
+
+    def restore(template, npz_file):
+        data = np.load(npz_file)
+        flat, treedef = _flatten(template)
+        leaves = []
+        for key in flat:
+            arr = data[key]
+            leaves.append(arr)
+        # rebuild in template order
+        paths = list(flat.keys())
+        by_key = {k: data[k] for k in paths}
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for p, leaf in flat_t:
+            key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                           for e in p)
+            arr = by_key[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape,
+                                                    leaf.shape)
+            out.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out)
+
+    params = restore(params_template, path / "params.npz")
+    opt = None
+    if opt_template is not None and (path / "opt_state.npz").exists():
+        opt = restore(opt_template, path / "opt_state.npz")
+    return params, opt, meta

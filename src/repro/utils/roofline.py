@@ -1,0 +1,88 @@
+"""Three-term roofline model for TPU v5e (assignment §Roofline).
+
+    compute   = HLO_FLOPs       / (chips * peak_FLOP/s)
+    memory    = HLO_bytes       / (chips * HBM_bw)
+    collective= collective_bytes/ (chips * link_bw)
+
+Constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+``collective_bytes`` here is already per-device (parsed from the SPMD
+module, which is per-device), so its term does not divide by chips again;
+HLO FLOPs/bytes from ``cost_analysis`` are likewise per-device on an SPMD
+module — we document both conventions in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+    model_flops: float = 0.0     # 6*N*D (dense) / 6*N_active*D (MoE)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat / redundancy waste detector."""
+        total_hlo = self.flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    def row(self):
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collective_bytes,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             collective_bytes_per_device: float, chips: int,
+             model_flops: float = 0.0) -> Roofline:
+    """All inputs are per-device quantities of one executed step."""
+    return Roofline(
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=collective_bytes_per_device / ICI_BW,
+        flops=flops_per_device,
+        bytes_accessed=bytes_per_device,
+        collective_bytes=collective_bytes_per_device,
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D with N = active params, D = tokens processed by the step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens           # forward only
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

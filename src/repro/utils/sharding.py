@@ -1,0 +1,201 @@
+"""Parameter PartitionSpec rules (FSDP + tensor parallelism).
+
+Rules are keyed on the *leaf name* of the parameter path (``wq``,
+``w_down``, ``embed``...) and expressed over two logical groups:
+
+* ``FSDP``  — fully-sharded data-parallel axes: ``("pod", "data")`` on the
+  multi-pod mesh, ``("data",)`` single-pod,
+* ``TP``    — tensor/model parallel axis ``"model"`` (also hosts the
+  expert-parallel dimension of MoE weights).
+
+Leading stack dimensions from scan-over-layers (and whisper's stacked
+encoder/decoder) are padded with ``None`` automatically: rules match from
+the trailing dimensions.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP = "__fsdp__"
+TP = "model"
+
+# trailing-dims spec per leaf name
+_RULES = {
+    # embeddings / vocab
+    "embed": (TP, FSDP),
+    "lm_head": (FSDP, TP),
+    "dec_pos": (None, FSDP),
+    # attention
+    "wq": (FSDP, TP), "wk": (FSDP, TP), "wv": (FSDP, TP),
+    "wo": (TP, FSDP),
+    "bq": (TP,), "bk": (TP,), "bv": (TP,),
+    # dense mlp
+    "w_gate": (FSDP, TP), "w_up": (FSDP, TP), "w_down": (TP, FSDP),
+    "b_up": (TP,), "b_down": (None,),
+    # moe (3D expert weights override the 2D mlp names by arity)
+    "router": (FSDP, None),
+    # mamba
+    "in_proj": (FSDP, TP), "out_proj": (TP, FSDP),
+    "conv_w": (None, TP), "conv_b": (TP,),
+    "A_log": (TP,), "D": (TP,), "dt_bias": (TP,),
+    "norm_scale": (None,),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+# MoE expert tensors are 3D (E, d, f) / (E, f, d): experts over TP,
+# feature FSDP.
+_MOE_RULES = {
+    "w_gate": (TP, FSDP, None),
+    "w_up": (TP, FSDP, None),
+    "w_down": (TP, None, FSDP),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _resolve(entry, dim, mesh_axes, axis_sizes, fsdp_axes):
+    """Resolve one rule entry against the mesh, dropping axes that do not
+    divide the dimension (e.g. vocab 51865 on a 16-way axis -> replicate,
+    the standard fallback when a framework chooses not to pad)."""
+    if entry is None:
+        return None
+    if entry == FSDP:
+        sub = []
+        for a in fsdp_axes:
+            if a in mesh_axes and dim % (axis_sizes[a]
+                                         * _prod(axis_sizes[x]
+                                                 for x in sub)) == 0:
+                sub.append(a)
+        if not sub:
+            return None
+        return tuple(sub) if len(sub) > 1 else sub[0]
+    if entry in mesh_axes and dim % axis_sizes[entry] == 0:
+        return entry
+    return None
+
+
+def _prod(it):
+    out = 1
+    for v in it:
+        out *= v
+    return out
+
+
+def spec_for(path, leaf, mesh_axes, axis_sizes=None,
+             fsdp_axes=("pod", "data")) -> P:
+    name = _leaf_name(path)
+    ndim = leaf.ndim
+    axis_sizes = axis_sizes or {a: 1 for a in mesh_axes}
+    rule = None
+    if name in _MOE_RULES and ndim >= 3:
+        # distinguish stacked 2-D mlp (layer, d, f) from true 3-D expert
+        # tensors by path: MoE leaves live under a "moe" dict.
+        in_moe = any(getattr(e, "key", None) == "moe" for e in path)
+        if in_moe:
+            rule = _MOE_RULES[name]
+    if rule is None:
+        rule = _RULES.get(name)
+    if rule is None:
+        return P()                                     # replicate unknowns
+    rule = tuple(rule)
+    if len(rule) > ndim:                               # scalar-ish leaf
+        rule = rule[-ndim:] if ndim else ()
+    pad = (None,) * (ndim - len(rule))
+    dims = leaf.shape[ndim - len(rule):]
+    entries = pad + tuple(
+        _resolve(e, d, mesh_axes, axis_sizes, fsdp_axes)
+        for e, d in zip(rule, dims))
+    return P(*entries)
+
+
+def param_pspecs(params, mesh):
+    """Pytree of PartitionSpec matching ``params``."""
+    axes = tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(path, leaf, axes, sizes), params)
+
+
+def inference_param_pspecs(params, mesh):
+    """Serving-time parameter layout (§Perf optimization O2').
+
+    Differs from the training layout in the MoE experts: expert dim over
+    'model' AND the FFN hidden dim over the data axes — matching the
+    decode-regime EP (moe._moe_ep_replicated), which computes partial
+    FFN slices in place and psums (T, d) outputs.  No expert weight is
+    ever gathered (training FSDP gathers are amortized by huge batches;
+    a decode step's handful of tokens cannot amortize them).
+    """
+    base = param_pspecs(params, mesh)
+    axes = tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    n_data = 1
+    for a in data_axes:
+        n_data *= sizes[a]
+    f_entry = data_axes if len(data_axes) > 1 else (
+        data_axes[0] if data_axes else None)
+
+    def fix(path, leaf, spec):
+        name = _leaf_name(path)
+        in_moe = any(getattr(e, "key", None) == "moe" for e in path)
+        if in_moe and name in _MOE_RULES and leaf.ndim >= 3:
+            pad = (None,) * (leaf.ndim - 3)
+            e_ax = "model" if ("model" in axes
+                               and leaf.shape[-3] % sizes["model"] == 0) \
+                else None
+            # f dim: -1 for w_gate/w_up (E,d,f), -2 for w_down (E,f,d)
+            f_dim = -1 if name in ("w_gate", "w_up") else -2
+            fe = f_entry if leaf.shape[f_dim] % max(n_data, 1) == 0 \
+                else None
+            if name in ("w_gate", "w_up"):
+                return P(*(pad + (e_ax, None, fe)))
+            return P(*(pad + (e_ax, fe, None)))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf, spec: fix(path, leaf, spec), params, base)
+
+
+def cast_abstract_params(aparams, dtype):
+    """ShapeDtypeStruct pytree -> serving dtype (bf16 checkpoints; §Perf
+    optimization O1).  Integer leaves unchanged."""
+    import jax.numpy as jnp
+
+    def cast(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(l.shape, jnp.dtype(dtype))
+        return l
+
+    return jax.tree.map(cast, aparams)
+
+
+def param_shardings(params, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, mesh))
+
+
+def opt_state_pspecs(opt_state, params_pspecs):
+    """m/v mirror the parameter specs; step is replicated."""
+    return {
+        "m": params_pspecs,
+        "v": params_pspecs,
+        "step": P(),
+    }
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def abstract_params(api):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(api.init, jax.random.key(0))

@@ -1,0 +1,118 @@
+"""Unit tests: DAG IR, classification, branch extraction, layers (§3.1)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (MERGER, SEQUENTIAL, SPLITTER, SPLIT_MERGE,
+                        GraphBuilder, TensorSpec, branch_dependencies,
+                        build_layers, classify_nodes, extract_branches,
+                        graph_stats, validate_layers)
+from graph_zoo import chain_graph, diamond_graph, multihead_graph
+
+
+def test_topo_order_chain():
+    g, _ = chain_graph(depth=4)
+    order = g.topo_order()
+    assert len(order) == 4
+    pos = {n: i for i, n in enumerate(order)}
+    preds, _ = g.build_adjacency()
+    for n, ps in preds.items():
+        for p in ps:
+            assert pos[p] < pos[n]
+
+
+def test_cycle_detection():
+    g = GraphBuilder()
+    x = g.input((2,))
+    a = g.op("a", "elementwise", [x], [TensorSpec((2,))])
+    bnode = g.graph.add_node("b", "elementwise", [a], [TensorSpec((2,))])
+    # introduce cycle: a's node consumes b's output
+    g.graph.nodes[g.graph.producer_of(a)].inputs += (bnode.outputs[0],)
+    with pytest.raises(ValueError, match="cycle"):
+        g.graph.topo_order()
+
+
+def test_classification_labels():
+    g, _ = diamond_graph(branch_len=2, width=3)
+    labels = classify_nodes(g)
+    counts = {}
+    for v in labels.values():
+        counts[v] = counts.get(v, 0) + 1
+    assert counts[SPLITTER] == 1          # the split op
+    assert counts[MERGER] == 1            # the merge op
+    assert counts[SEQUENTIAL] == 3 * 2    # branch bodies
+
+
+def test_control_flow_forced_split_merge():
+    b = GraphBuilder()
+    x = b.input((2,))
+    y = b.op("while", "control_flow", [x], [TensorSpec((2,))])
+    b.mark_output(y)
+    g = b.build()
+    assert classify_nodes(g)[g.producer_of(y)] == SPLIT_MERGE
+
+
+def test_branches_partition_nodes():
+    for gf in (chain_graph, diamond_graph, multihead_graph):
+        g, _ = gf()
+        branches = extract_branches(g)
+        seen = [n for br in branches for n in br.nodes]
+        assert sorted(seen) == sorted(g.nodes.keys())
+        assert len(seen) == len(set(seen))
+
+
+def test_branch_maximality_chain():
+    g, _ = chain_graph(depth=6)
+    branches = extract_branches(g)
+    assert len(branches) == 1
+    assert len(branches[0].nodes) == 6
+
+
+def test_diamond_branches_and_layers():
+    g, _ = diamond_graph(branch_len=3, width=2)
+    branches = extract_branches(g)
+    # split singleton + 2 chains + merge singleton
+    lens = sorted(len(b.nodes) for b in branches)
+    assert lens == [1, 1, 3, 3]
+    layers = build_layers(g, branches)
+    validate_layers(g, branches, layers)
+    # middle layer holds both 3-node chains in parallel
+    widths = [len(l) for l in layers]
+    assert max(widths) == 2
+    assert len(layers) == 3
+
+
+def test_multihead_parallelism_exposed():
+    g, _ = multihead_graph(heads=4)
+    branches = extract_branches(g)
+    layers = build_layers(g, branches)
+    validate_layers(g, branches, layers)
+    # q/k/v chains of 4 heads are independent: expect a wide layer
+    assert max(len(l) for l in layers) >= 4
+
+
+def test_branch_dependencies_acyclic():
+    g, _ = multihead_graph(heads=2)
+    branches = extract_branches(g)
+    deps, rdeps = branch_dependencies(g, branches)
+    for b, ss in deps.items():
+        assert b not in ss
+        for s in ss:
+            assert b in rdeps[s]
+
+
+def test_graph_stats_table7_shape():
+    g, _ = multihead_graph(heads=4)
+    st = graph_stats(g)
+    assert st.nodes == g.num_nodes()
+    assert st.max_branches >= 4
+    assert st.parallel_layers >= 1
+
+
+def test_execute_oracle_runs():
+    g, make = diamond_graph()
+    rng = np.random.default_rng(0)
+    env = g.execute(make(rng))
+    out = env[g.outputs[0]]
+    assert np.asarray(out).shape == (8, 8)
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,85 @@
+"""Unit tests: delegate partitioning cost model (§3.1, Appendices A/B)."""
+
+import numpy as np
+
+from repro.core import (CostModel, MOBILE_SOC, TPU_V5E, assign_epochs,
+                        candidate_regions, partition_graph)
+from graph_zoo import heterogeneous_graph, chain_graph
+
+
+def test_threshold_derivation_appendix_b():
+    # F > L * R_cpu = 0.2ms * 1e9 MAC/s = 2e5 MACs (paper B.3)
+    assert MOBILE_SOC.derived_flops_floor() == 0.2e-3 * 1e9
+    # B/F < B_bw / R_acc = 51.2e9 / 2.6e13 ≈ 0.00197 bytes/MAC
+    np.testing.assert_allclose(MOBILE_SOC.derived_bytes_per_mac(),
+                               51.2e9 / 2.6e13)
+    # TPU v5e re-derivation (DESIGN.md §2): ≈ 0.0083 bytes/MAC
+    np.testing.assert_allclose(TPU_V5E.derived_bytes_per_mac(),
+                               819e9 / 98.5e12, rtol=1e-6)
+
+
+def test_cost_model_enforced_thresholds():
+    cm = CostModel()
+    assert cm.accept(3, 1e9, int(0.1 * 1e9))          # exactly at thresholds
+    assert not cm.accept(2, 1e10, 0)                  # N too small
+    assert not cm.accept(5, 0.5e9, 0)                 # F too small
+    assert not cm.accept(5, 1e9, int(0.2 * 1e9))      # B/F too big
+
+
+def test_epochs_monotone_and_kind_consistent():
+    g, _ = heterogeneous_graph()
+    epoch = assign_epochs(g)
+    _, succs = g.build_adjacency()
+    for n, ss in succs.items():
+        for s in ss:
+            assert epoch[s] >= epoch[n]
+    for nid, e in epoch.items():
+        assert (e % 2 == 0) == g.nodes[nid].supported
+
+
+def test_candidate_regions_convex_and_supported():
+    g, _ = heterogeneous_graph()
+    regions = candidate_regions(g)
+    for r in regions:
+        for n in r:
+            assert g.nodes[n].supported
+    # the control-flow node separates the two matmul regions
+    assert len(regions) >= 2
+
+
+def test_partition_fuses_big_regions_only():
+    g, make = heterogeneous_graph()
+    g2, report = partition_graph(g)
+    delegates = [n for n in g2.nodes.values() if n.op_class == "delegate"]
+    # both 4-matmul regions have F=8e9 >= 1e9 and tiny boundaries -> fused
+    assert len(delegates) == len(report.accepted) >= 2
+    # fallback control-flow op survives un-fused
+    assert any(n.op_class == "control_flow" for n in g2.nodes.values())
+    # small misc tail region (0 FLOPs) must have been rejected
+    assert any(not r.accepted for r in report.regions)
+
+
+def test_partition_preserves_semantics():
+    g, make = heterogeneous_graph()
+    rng = np.random.default_rng(1)
+    env = make(rng)
+    ref = g.execute(env)[g.outputs[0]]
+    g2, _ = partition_graph(g)
+    got = g2.execute(env)[g2.outputs[0]]
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), rtol=1e-6)
+
+
+def test_partition_low_flops_graph_not_delegated():
+    g, _ = chain_graph(depth=5, dim=8)   # tiny matmuls, F << 1e9
+    g2, report = partition_graph(g)
+    assert not report.accepted
+    assert all(n.op_class != "delegate" for n in g2.nodes.values())
+
+
+def test_fused_delegate_indivisible_in_branches():
+    from repro.core import extract_branches
+    g, _ = heterogeneous_graph()
+    g2, _ = partition_graph(g)
+    branches = extract_branches(g2)
+    seen = [n for b in branches for n in b.nodes]
+    assert sorted(seen) == sorted(g2.nodes.keys())

@@ -1,0 +1,176 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles,
+swept over shapes and dtypes (assignment deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.branch_matmul.ops import (branch_matmul_op,
+                                             branch_matmul_ref,
+                                             parallel_branches)
+from repro.kernels.decode_attention.ops import (decode_attention_op,
+                                                decode_attention_ref)
+from repro.kernels.flash_attention.ops import (flash_attention_op,
+                                               flash_attention_ref)
+from repro.kernels.ssd_scan.ops import ssd_scan_kernel_ref, ssd_scan_op
+
+TOL = {"float32": dict(rtol=2e-5, atol=2e-5),
+       "bfloat16": dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# branch_matmul
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("G,M,K,N,bm,bn,bk", [
+    (2, 16, 32, 16, 8, 8, 16),
+    (4, 8, 64, 32, 8, 16, 32),
+    (1, 32, 32, 32, 16, 16, 16),
+    (6, 8, 16, 128, 8, 128, 16),
+])
+def test_branch_matmul_sweep(dtype, G, M, K, N, bm, bn, bk):
+    x = _rand(jax.random.key(0), (G, M, K), dtype)
+    w = _rand(jax.random.key(1), (G, K, N), dtype)
+    got = branch_matmul_op(x, w, block_m=bm, block_n=bn, block_k=bk,
+                           interpret=True)
+    ref = branch_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_parallel_branches_ragged_sizes():
+    """Paper §3.1: β-balanced branches of *unequal* M fused via padding."""
+    key = jax.random.key(0)
+    xs = [_rand(jax.random.fold_in(key, i), (m, 24), "float32")
+          for i, m in enumerate([5, 7, 6])]
+    ws = [_rand(jax.random.fold_in(key, 10 + i), (24, 16), "float32")
+          for i in range(3)]
+    outs = parallel_branches(xs, ws, interpret=True, block_m=8,
+                             block_n=16, block_k=8)
+    for x, w, o in zip(xs, ws, outs):
+        np.testing.assert_allclose(np.asarray(o),
+                                   np.asarray(x @ w), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("B,H,K,S,T,D,bq,bk,causal,window", [
+    (1, 4, 2, 32, 32, 16, 8, 8, True, 0),       # GQA causal
+    (2, 2, 2, 16, 16, 32, 16, 16, True, 0),     # MHA
+    (1, 4, 1, 32, 32, 16, 8, 16, True, 8),      # sliding window (MQA)
+    (1, 2, 2, 16, 32, 16, 8, 8, False, 0),      # cross attention T > S
+])
+def test_flash_attention_sweep(dtype, B, H, K, S, T, D, bq, bk, causal,
+                               window):
+    q = _rand(jax.random.key(0), (B, H, S, D), dtype)
+    k = _rand(jax.random.key(1), (B, K, T, D), dtype)
+    v = _rand(jax.random.key(2), (B, K, T, D), dtype)
+    got = flash_attention_op(q, k, v, causal=causal, window=window,
+                             block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the models' attend() contract end-to-end."""
+    from repro.models.attention import attend, causal_mask
+    B, S, H, K, D = 2, 32, 4, 2, 16
+    q = _rand(jax.random.key(0), (B, S, H, D), "float32")
+    k = _rand(jax.random.key(1), (B, S, K, D), "float32")
+    v = _rand(jax.random.key(2), (B, S, K, D), "float32")
+    ref = attend(q, k, v, causal_mask(S, S))
+    from repro.kernels.flash_attention.ops import attend_bshd
+    got = attend_bshd(q, k, v, causal=True, interpret=True, block_q=8,
+                      block_k=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# decode_attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("B,H,K,T,D,bk,window,cache_len", [
+    (1, 4, 2, 64, 16, 16, 0, 40),
+    (2, 2, 2, 128, 32, 64, 0, 100),
+    (1, 4, 1, 64, 16, 16, 16, 50),     # sliding window
+    (1, 2, 2, 64, 16, 32, 0, 0),       # first token
+])
+def test_decode_attention_sweep(dtype, B, H, K, T, D, bk, window,
+                                cache_len):
+    q = _rand(jax.random.key(0), (B, H, D), dtype)
+    k = _rand(jax.random.key(1), (B, K, T, D), dtype)
+    v = _rand(jax.random.key(2), (B, K, T, D), dtype)
+    pos = jnp.where(jnp.arange(T) <= cache_len, jnp.arange(T), -1)
+    got = decode_attention_op(q, k, v, pos, cache_len, window=window,
+                              block_k=bk, interpret=True)
+    ref = decode_attention_ref(q, k, v, pos, cache_len, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_decode_attention_ring_positions():
+    """Ring-buffer slot order (positions permuted) must not matter."""
+    B, H, K, T, D = 1, 2, 2, 32, 16
+    q = _rand(jax.random.key(0), (B, H, D), "float32")
+    k = _rand(jax.random.key(1), (B, K, T, D), "float32")
+    v = _rand(jax.random.key(2), (B, K, T, D), "float32")
+    perm = jax.random.permutation(jax.random.key(3), T)
+    pos = perm.astype(jnp.int32)                      # scrambled positions
+    cache_len = 31
+    got = decode_attention_op(q, k, v, pos, cache_len, window=8,
+                              block_k=8, interpret=True)
+    ref = decode_attention_ref(q, k, v, pos, cache_len, window=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# ssd_scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32"])
+@pytest.mark.parametrize("b,S,H,G,P,N,chunk", [
+    (1, 32, 2, 1, 8, 4, 8),
+    (2, 64, 4, 2, 16, 8, 16),
+    (1, 16, 2, 2, 8, 8, 4),
+])
+def test_ssd_scan_sweep(dtype, b, S, H, G, P, N, chunk):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((b, S, H, P)), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, S, H)), dtype)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, S, G, N)), dtype)
+    C = jnp.asarray(rng.standard_normal((b, S, G, N)), dtype)
+    got = ssd_scan_op(x, dt, A, B, C, chunk=chunk, interpret=True)
+    from repro.models.ssm import ssd_scan_ref
+    ref, _ = ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_matches_chunked_model_path():
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(1)
+    b, S, H, G, P, N, chunk = 1, 32, 2, 1, 8, 4, 8
+    x = jnp.asarray(rng.standard_normal((b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, S, G, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, S, G, N)), jnp.float32)
+    got = ssd_scan_op(x, dt, A, B, C, chunk=chunk, interpret=True)
+    ref, _ = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,67 @@
+"""Integration: Pallas kernels plugged into the model stack."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.moe import init_moe, moe_dense, moe_ragged
+from repro.models.moe_pallas import moe_branch_matmul
+
+
+def _cfg(E=4, k=2, d=64, f=32):
+    return ModelConfig(name="t", arch_type="moe", num_layers=1,
+                       d_model=d, num_heads=4, num_kv_heads=2, d_ff=0,
+                       vocab_size=7,
+                       moe=MoEConfig(num_experts=E, num_experts_per_tok=k,
+                                     d_ff_expert=f),
+                       dtype="float32")
+
+
+@pytest.mark.parametrize("E,k,T,d,f", [
+    (4, 2, 24, 64, 32),
+    (8, 2, 16, 32, 64),
+    (2, 1, 12, 32, 32),
+])
+def test_moe_branch_matmul_matches_dense(E, k, T, d, f):
+    """Grouped-GEMM expert compute (branch_matmul kernel, interpret mode)
+    == the dense oracle, with ample capacity (no drops)."""
+    cfg = _cfg(E, k, d, f)
+    params = init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (T, d))
+    ref, aux_ref = moe_dense(params, cfg, x)
+    got, aux = moe_branch_matmul(params, cfg, x, capacity_factor=float(E),
+                                 interpret=True, block_m=8, block_n=32,
+                                 block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-6)
+
+
+def test_moe_branch_matmul_drops_over_capacity():
+    """Switch semantics: tokens over capacity contribute zero, never NaN."""
+    cfg = _cfg(E=2, k=2)
+    params = init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (64, 64))
+    y, _ = moe_branch_matmul(params, cfg, x, capacity_factor=0.25,
+                             interpret=True, block_m=8, block_n=32,
+                             block_k=32)
+    assert bool(jnp.isfinite(y).all())
+    full, _ = moe_branch_matmul(params, cfg, x, capacity_factor=4.0,
+                                interpret=True, block_m=8, block_n=32,
+                                block_k=32)
+    # dropping reduces (or keeps) magnitude, never invents contribution
+    assert float(jnp.abs(y).sum()) <= float(jnp.abs(full).sum()) + 1e-3
+
+
+def test_moe_ragged_and_pallas_agree():
+    cfg = _cfg()
+    params = init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(2), (24, 64))
+    a, _ = moe_ragged(params, cfg, x)
+    b, _ = moe_branch_matmul(params, cfg, x, capacity_factor=4.0,
+                             interpret=True, block_m=8, block_n=32,
+                             block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,84 @@
+"""Additional hypothesis properties: SlabPool, allocator, ring cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BumpAllocator, SlabPool
+
+
+@given(st.lists(st.tuples(st.booleans(),
+                          st.integers(min_value=1, max_value=4096)),
+                min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_bump_allocator_no_live_overlap(ops):
+    """Random alloc/free traces never hand out overlapping live blocks,
+    and the high-water mark never exceeds sum of all allocations."""
+    a = BumpAllocator()
+    live: dict = {}
+    total_alloc = 0
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            off = a.allocate(size)
+            aligned = (size + 63) // 64 * 64
+            for o2, s2 in live.values():
+                assert off + aligned <= o2 or o2 + s2 <= off, \
+                    "overlapping live allocations"
+            live[len(live) + total_alloc] = (off, aligned)
+            total_alloc += aligned
+        else:
+            key = next(iter(live))
+            off, sz = live.pop(key)
+            a.free(off, sz)
+    assert a.high_water <= total_alloc
+
+
+@given(st.lists(st.tuples(st.booleans(),
+                          st.integers(min_value=1, max_value=1 << 20)),
+                min_size=1, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_slab_pool_conservation(ops):
+    """in_use == sum of outstanding slabs; peak == max total allocated;
+    releasing everything always allows reuse."""
+    pool = SlabPool()
+    out = []
+    for acquire, size in ops:
+        if acquire or not out:
+            out.append(pool.acquire(size))
+        else:
+            pool.release(out.pop())
+        assert pool.in_use == sum(s.size for s in out)
+        assert pool.total_allocated >= pool.in_use
+        assert pool.peak_bytes == pool.total_allocated
+    for s in out:
+        pool.release(s)
+    before = pool.total_allocated
+    pool.acquire(1)
+    assert pool.total_allocated == before          # reused, not grown
+
+
+@given(st.integers(min_value=1, max_value=200),
+       st.integers(min_value=4, max_value=32))
+@settings(max_examples=20, deadline=None)
+def test_ring_cache_decode_any_length(total_len, window):
+    """Ring-cache decode equals full-cache decode at arbitrary lengths
+    (including many wrap-arounds)."""
+    from repro.models.attention import (decode_step_attention,
+                                        init_kv_cache)
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="t", arch_type="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=32,
+                      vocab_size=7, sliding_window=window,
+                      dtype="float32")
+    from repro.models.attention import init_attention
+    p = init_attention(jax.random.key(0), cfg)
+    full = init_kv_cache(cfg, 1, total_len, jnp.float32, ring=False)
+    ring = init_kv_cache(cfg, 1, total_len, jnp.float32, ring=True)
+    xs = jax.random.normal(jax.random.key(1), (total_len, 1, 1, 32)) * 0.5
+    for t in range(min(total_len, 3 * window + 2)):
+        of, full = decode_step_attention(p, cfg, xs[t], full, t)
+        orr, ring = decode_step_attention(p, cfg, xs[t], ring, t)
+        np.testing.assert_allclose(np.asarray(of), np.asarray(orr),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"t={t} window={window}")

@@ -1,0 +1,134 @@
+"""Tests: serving engine admission, KV cache manager, training substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.engine import Request, ServingEngine
+from repro.runtime.kv_cache import (KVCacheManager, kv_bytes_per_token,
+                                    request_peak_bytes, state_bytes)
+from repro.training import OptConfig, apply_updates, init_opt_state
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.data.pipeline import SyntheticTokens
+
+
+# -- kv cache manager --------------------------------------------------------
+
+def test_kv_bytes_per_token_matches_shapes():
+    cfg = get_config("h2o-danube-3-4b")
+    per_tok = kv_bytes_per_token(cfg)
+    # 2 (k+v) * layers * kv_heads * head_dim * 2 bytes
+    assert per_tok == 2 * 24 * 8 * 120 * 2
+
+
+def test_sliding_window_caps_request_peak():
+    cfg = get_config("h2o-danube-3-4b")          # window 4096
+    assert (request_peak_bytes(cfg, 100_000)
+            == request_peak_bytes(cfg, 4096))
+
+
+def test_ssm_state_bytes_constant_in_context():
+    cfg = get_config("mamba2-370m")
+    assert state_bytes(cfg) > 0
+    assert request_peak_bytes(cfg, 100) == request_peak_bytes(cfg, 10_000)
+
+
+def test_cache_manager_budget_enforced():
+    cfg = get_config("stablelm-3b").reduced()
+    per = request_peak_bytes(cfg, 64)
+    mgr = KVCacheManager(cfg, budget_bytes=int(per * 2.5))
+    mgr.admit(0, 64)
+    mgr.admit(1, 64)
+    assert not mgr.can_admit(64)
+    with pytest.raises(MemoryError):
+        mgr.admit(2, 64)
+    mgr.release(0)
+    lease = mgr.admit(2, 64)                     # slab reuse
+    assert mgr.pool.reuse_count == 1
+    assert mgr.peak_bytes <= int(per * 2.5)
+
+
+# -- serving engine ----------------------------------------------------------
+
+def test_engine_completes_all_requests_within_budget():
+    cfg = get_config("stablelm-3b").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    per = request_peak_bytes(cfg, 20)
+    engine = ServingEngine(api, params,
+                           hbm_budget_bytes=int(per * 2 / 0.6),
+                           max_batch=4)
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        engine.submit(Request(i, rng.integers(0, cfg.vocab_size, 8)
+                              .astype(np.int32), max_new_tokens=4))
+    done = engine.run()
+    assert sorted(done) == [0, 1, 2, 3, 4]
+    for c in done.values():
+        assert len(c.tokens) == 4
+    assert engine.kv.peak_bytes <= engine.kv.budget
+
+
+def test_engine_greedy_decode_is_deterministic():
+    cfg = get_config("stablelm-3b").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+
+    def run_once():
+        eng = ServingEngine(api, params, hbm_budget_bytes=1 << 28)
+        eng.submit(Request(0, np.arange(6, dtype=np.int32),
+                           max_new_tokens=5))
+        return eng.run()[0].tokens
+
+    assert run_once() == run_once()
+
+
+# -- optimizer / checkpoint / data -------------------------------------------
+
+def test_adamw_reduces_quadratic_loss():
+    cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||^2
+        params, state, _ = apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_adamw_bf16_moments_dtype():
+    cfg = OptConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((4,))}
+    state = init_opt_state(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    params, state, _ = apply_updates(params, {"w": jnp.ones((4,))},
+                                     state, cfg)
+    assert state["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"a": jnp.arange(6.0).reshape(2, 3),
+              "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    opt = init_opt_state(params, OptConfig())
+    save_checkpoint(tmp_path / "ck", params, opt, step=7,
+                    metadata={"note": "t"})
+    p2, o2, meta = load_checkpoint(tmp_path / "ck", params, opt)
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(np.asarray(p2["a"]),
+                                  np.asarray(params["a"]))
+    assert p2["nested"]["b"].dtype == jnp.bfloat16
+    assert int(o2["step"]) == 0
+
+
+def test_synthetic_pipeline_deterministic_and_learnable():
+    a = list(zip(range(3), SyntheticTokens(64, 16, 4, seed=1)))
+    b = list(zip(range(3), SyntheticTokens(64, 16, 4, seed=1)))
+    for (_, x), (_, y) in zip(a, b):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+    batch = a[0][1]
+    assert batch["tokens"].shape == (4, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                  batch["labels"][:, :-1])
