@@ -3,8 +3,11 @@
 Modes mirror the paper's columns:
   * ``framework``  — op-by-op topological interpretation (stock-framework
     CPU execution: ORT/TFLite analogue),
-  * ``parallax-cpu`` — Parallax plan, no delegate partitioning (the
-    paper's CPU-only rows),
+  * ``parallax-interp`` — Parallax plan interpreted group-by-group (one
+    dispatch per scheduled unit; the pre-fusion executor),
+  * ``parallax-fused`` — schedule compiled per layer (one dispatch per
+    layer; core/compile.py),
+  * ``parallax-whole`` — whole schedule fused into a single callable,
   * ``parallax-het`` — full pipeline incl. delegate-region fusion (the
     heterogeneous rows: fused regions = accelerator-offloaded segments).
 
@@ -32,19 +35,26 @@ def run(batch=1, seq=32, iters=20, warmup=5, archs=None):
     for arch in archs or PAPER_MODEL_SET:
         cfg, g, make = build_dag(arch, batch, seq)
         env = make(np.random.default_rng(0))
-        ref = PlanExecutor(compile_plan(g, CFG_CPU), mode="reference")
-        par_w1 = PlanExecutor(compile_plan(g, CFG_W1), mode="parallax")
-        par_cpu = PlanExecutor(compile_plan(g, CFG_CPU), mode="parallax")
+        plan_cpu = compile_plan(g, CFG_CPU)
+        ref = PlanExecutor(plan_cpu, mode="reference")
+        par_w1 = PlanExecutor(compile_plan(g, CFG_W1), mode="parallax",
+                              fused=False)
+        par_interp = PlanExecutor(plan_cpu, mode="parallax", fused=False)
+        par_fused = PlanExecutor(plan_cpu, mode="parallax")
+        par_whole = PlanExecutor(plan_cpu, mode="parallax", whole_plan=True)
         par_het = PlanExecutor(compile_plan(g, CFG_HET), mode="parallax")
 
         for name, ex in [("framework", ref), ("compiled-w1", par_w1),
-                         ("parallax-cpu", par_cpu),
+                         ("parallax-interp", par_interp),
+                         ("parallax-fused", par_fused),
+                         ("parallax-whole", par_whole),
                          ("parallax-het", par_het)]:
             lo, hi, mean = time_fn(lambda: block_outputs(ex(env)),
                                    warmup=warmup, iters=iters)
             rows.append({"arch": arch, "mode": name,
                          "min_ms": lo * 1e3, "max_ms": hi * 1e3,
-                         "mean_ms": mean * 1e3})
+                         "mean_ms": mean * 1e3,
+                         "dispatches": ex.last_dispatch_count})
     return rows
 
 
@@ -56,20 +66,24 @@ def main():
     print("# Table 3 analogue — latency min/max ms (CPU, reduced configs)")
     print("# framework = op-by-op interpreter; compiled-w1 = compiled "
           "branches, serialized;")
-    print("# parallax gains vs compiled-w1 isolate branch grouping "
-          "(the paper's claim)")
+    print("# parallax-interp = one dispatch per group; -fused = one per "
+          "layer; -whole = one per run")
     print(f"{'arch':18s} {'framework':>15s} {'compiled-w1':>15s} "
-          f"{'parallax-cpu':>15s} {'parallax-het':>15s} {'vs-w1':>7s} "
-          f"{'vs-fw':>7s}")
+          f"{'plx-interp':>15s} {'plx-fused':>15s} {'plx-whole':>15s} "
+          f"{'plx-het':>15s} {'vs-w1':>7s} {'vs-fw':>7s}")
     for arch, modes in by_arch.items():
         f = modes["framework"]
         w1 = modes["compiled-w1"]
-        c = modes["parallax-cpu"]
+        i = modes["parallax-interp"]
+        c = modes["parallax-fused"]
+        w = modes["parallax-whole"]
         h = modes["parallax-het"]
-        best = min(c["mean_ms"], h["mean_ms"])
+        best = min(c["mean_ms"], w["mean_ms"], h["mean_ms"])
         print(f"{arch:18s} {f['min_ms']:6.1f}/{f['max_ms']:<7.1f} "
               f"{w1['min_ms']:6.1f}/{w1['max_ms']:<7.1f} "
+              f"{i['min_ms']:6.1f}/{i['max_ms']:<7.1f} "
               f"{c['min_ms']:6.1f}/{c['max_ms']:<7.1f} "
+              f"{w['min_ms']:6.1f}/{w['max_ms']:<7.1f} "
               f"{h['min_ms']:6.1f}/{h['max_ms']:<7.1f} "
               f"{100*(1-best/w1['mean_ms']):+5.1f}% "
               f"{f['mean_ms']/best:5.1f}x")

@@ -37,9 +37,12 @@ def run(archs=("whisper-tiny", "dbrx-132b"), batch=1, seq=32, iters=10):
     for arch in archs:
         cfg, g, make = build_dag(arch, batch, seq)
         env = make(np.random.default_rng(0))
-        base_ex = PlanExecutor(compile_plan(g, CFG_W1), mode="parallax")
+        # profile=True: per-layer barriers so layer_timings measure completed
+        # compute, not async dispatch latency
+        base_ex = PlanExecutor(compile_plan(g, CFG_W1), mode="parallax",
+                               profile=True)
         plx_plan = compile_plan(g, CFG_PLX)
-        plx_ex = PlanExecutor(plx_plan, mode="parallax")
+        plx_ex = PlanExecutor(plx_plan, mode="parallax", profile=True)
 
         base_t, _ = _layer_times(base_ex, env, iters)
         plx_t, widths = _layer_times(plx_ex, env, iters)

@@ -15,6 +15,8 @@ from .arena import (ArenaPlan, BumpAllocator, SlabPool, plan_branch_arena,
 from .balance import DEFAULT_BETA, LayerGroups, balance_ratio, group_layer
 from .classify import (Branch, annotate_workloads, branch_dependencies,
                        classify_nodes, extract_branches)
+from .compile import (CompiledLayer, CompiledSchedule, CompileStats,
+                      clear_compile_cache, compile_schedule, gemm_positions)
 from .executor import ArenaExecutor, PlanExecutor, RunResult, make_subgraph_fn
 from .flops import (attention_flops, conv2d_flops, elementwise_flops,
                     matmul_flops, misc_flops, pooling_flops, ssd_scan_flops)
@@ -31,7 +33,8 @@ from .partition import (CostModel, HardwareProfile, MOBILE_SOC, TPU_V5E,
                         partition_graph)
 from .pipeline import (MOBILE_CONFIG, TPU_CONFIG, ParallaxConfig,
                        compile_plan)
-from .plan import ExecutionPlan, GraphStats, graph_stats
+from .plan import (ExecutionPlan, GraphStats, fn_fingerprint, graph_stats,
+                   plan_signature)
 from .scheduler import (Schedule, ScheduledLayer, greedy_select,
                         memory_budget, query_available_memory,
                         schedule_layers)

@@ -7,11 +7,43 @@ Three executors over one :class:`~repro.core.plan.ExecutionPlan`:
 * ``sequential`` — layer/branch-ordered op-by-op execution (same work as
   reference, Parallax structure but no parallelism; the paper's "1 thread"
   point in Fig. 3).
-* ``parallax`` — each admitted parallel group is compiled into a *single*
-  fused callable (one dispatch per group; XLA executes the independent
-  branches concurrently and, on TPU, branch-batched kernels keep the MXU
-  fed).  This is the TPU-native realization of the paper's multi-threaded
-  branch execution (DESIGN.md §2).
+* ``parallax`` — the schedule is *compiled* (core/compile.py): by default
+  every scheduled layer lowers to one fused ``jax.jit`` callable, and
+  homogeneous balanced groups batch their matmuls into the grouped
+  ``branch_matmul`` Pallas GEMM.  This is the TPU-native realization of
+  the paper's multi-threaded branch execution (DESIGN.md §2).
+
+Execution modes & dispatch model
+--------------------------------
+
+========================  =============================  ==================
+mode                      unit of dispatch               dispatches / run
+========================  =============================  ==================
+``reference``             one eager op                   O(nodes)
+``sequential``            one eager op, schedule order   O(nodes)
+``parallax`` (fused)      one scheduled layer            O(layers)
+``parallax`` whole-plan   the entire schedule            1
+``parallax`` interpreted  one group / one branch         O(groups x layers)
+========================  =============================  ==================
+
+Synchronization: with ``profile=False`` (default) the parallax executor
+never blocks mid-run — dispatches stream asynchronously and exactly one
+``jax.block_until_ready`` happens at the graph outputs (``last_sync_count
+== 1``).  ``profile=True`` reinstates a barrier after every scheduled
+layer so ``RunResult.layer_timings`` measure completed compute; without
+it they measure (cheap) async dispatch latency.  ``sequential`` keeps its
+per-layer barriers — it exists to model barrier-synchronized baselines.
+
+Homogeneous-group batching kicks in when a §3.1-balanced group's branches
+share chain length and a chain position is a pure 2-D matmul with
+identical shapes across branches; that position runs as ONE grouped
+``branch_matmul`` ``(G, M, K) x (G, K, N)`` kernel call inside the fused
+layer.  Disable with ``use_branch_kernel=False``.
+
+Compiled callables are cached per graph object, keyed on
+:func:`~repro.core.plan.plan_signature` — fresh executors over an
+identical plan signature (same graph) share compiled artifacts and never
+re-trace; entries are evicted when the graph is garbage collected.
 
 ``ArenaExecutor`` additionally materializes every branch arena as a real
 byte buffer and runs the graph *through the planned offsets*, so any
@@ -27,6 +59,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from .compile import compile_schedule
 from .graph import Graph, region_boundary_tensors
 from .plan import ExecutionPlan
 
@@ -72,21 +105,48 @@ class RunResult:
 
 
 class PlanExecutor:
-    """Executes an ExecutionPlan in one of the three modes."""
+    """Executes an ExecutionPlan in one of the three modes.
+
+    Parallax-mode knobs (see module docstring for semantics):
+
+    * ``fused`` — lower the schedule with core/compile.py (default).
+      ``fused=False`` keeps the interpreted one-dispatch-per-group path
+      (the baseline ``benchmarks/dispatch.py`` measures against).
+    * ``whole_plan`` — fuse the entire schedule into a single callable.
+    * ``profile`` — re-enable per-layer barriers for honest layer timings.
+    * ``use_branch_kernel`` — grouped-GEMM batching of homogeneous groups.
+    * ``donate`` — buffer donation for dead intermediates (None = auto:
+      on for backends that support it, off on CPU).
+
+    Counters: ``last_dispatch_count`` / ``last_sync_count`` describe the
+    most recent run; ``dispatch_count`` / ``sync_count`` accumulate.
+    """
 
     def __init__(self, plan: ExecutionPlan, mode: str = "parallax",
-                 jit_groups: bool = True):
+                 jit_groups: bool = True, *, fused: bool = True,
+                 whole_plan: bool = False, profile: bool = False,
+                 use_branch_kernel: bool = True,
+                 donate: "bool | None" = None):
         if mode not in ("reference", "sequential", "parallax"):
             raise ValueError(f"unknown mode {mode!r}")
         self.plan = plan
         self.mode = mode
-        # "parallax" compiles every scheduled unit (parallel groups AND
-        # single branches) — the paper's fine-grained subgraph control.
-        # "sequential"/"reference" stay op-by-op like a stock interpreter.
+        self.profile = profile
+        # "parallax" compiles every scheduled unit; "sequential"/"reference"
+        # stay op-by-op like a stock interpreter.
         self.jit_groups = jit_groups and mode == "parallax"
         self._group_cache: dict = {}
+        self.compiled = None
+        if mode == "parallax" and fused:
+            self.compiled = compile_schedule(
+                plan, whole_plan=whole_plan,
+                use_branch_kernel=use_branch_kernel, donate=donate)
+        self.dispatch_count = 0
+        self.sync_count = 0
+        self.last_dispatch_count = 0
+        self.last_sync_count = 0
 
-    # -- group compilation ---------------------------------------------------
+    # -- group compilation (interpreted path) -------------------------------
 
     def _group_callable(self, branch_ids: "tuple[int, ...]"):
         key = tuple(branch_ids)
@@ -102,14 +162,63 @@ class PlanExecutor:
     # -- execution -------------------------------------------------------
 
     def __call__(self, env: "dict[int, object]") -> RunResult:
-        graph = self.plan.graph
+        self.last_dispatch_count = 0
+        self.last_sync_count = 0
         if self.mode == "reference":
-            t0 = time.perf_counter()
-            full = graph.execute(env)
-            dt = time.perf_counter() - t0
-            outs = {t: full[t] for t in graph.outputs}
-            return RunResult(outs, [LayerTiming(0, dt, 1)])
+            result = self._run_reference(env)
+        elif self.compiled is not None:
+            result = self._run_fused(env)
+        else:
+            result = self._run_interpreted(env)
+        self.dispatch_count += self.last_dispatch_count
+        self.sync_count += self.last_sync_count
+        return result
 
+    def _block(self, arrays) -> None:
+        jax.block_until_ready(arrays)
+        self.last_sync_count += 1
+
+    def _run_reference(self, env) -> RunResult:
+        graph = self.plan.graph
+        t0 = time.perf_counter()
+        full = graph.execute(env)
+        outs = {t: full[t] for t in graph.outputs}
+        self._block(list(outs.values()))
+        dt = time.perf_counter() - t0
+        self.last_dispatch_count = len(graph.nodes)
+        return RunResult(outs, [LayerTiming(0, dt, 1)])
+
+    def _run_fused(self, env) -> RunResult:
+        graph = self.plan.graph
+        c = self.compiled
+        env = dict(env)
+        timings: list[LayerTiming] = []
+        if c.whole is not None:
+            t0 = time.perf_counter()
+            outs = c.whole.fn(*[env[t] for t in c.whole.in_ids])
+            self.last_dispatch_count += 1
+            env.update(zip(c.whole.out_ids, outs))
+            if self.profile:
+                self._block(outs)
+            timings.append(
+                LayerTiming(0, time.perf_counter() - t0, c.whole.width))
+        else:
+            for cl in c.layers:
+                t0 = time.perf_counter()
+                outs = cl.fn(*[env[t] for t in cl.in_ids])
+                self.last_dispatch_count += 1
+                env.update(zip(cl.out_ids, outs))
+                if self.profile:
+                    self._block(outs)
+                timings.append(LayerTiming(cl.layer_index,
+                                           time.perf_counter() - t0,
+                                           cl.width))
+        outs = {t: env[t] for t in graph.outputs}
+        self._block(list(outs.values()))
+        return RunResult(outs, timings)
+
+    def _run_interpreted(self, env) -> RunResult:
+        graph = self.plan.graph
         env = dict(env)
         timings: list[LayerTiming] = []
         for sl in self.plan.schedule.layers:
@@ -120,6 +229,7 @@ class PlanExecutor:
                 for group in sl.parallel_groups:
                     fn, in_ids, out_ids = self._group_callable(tuple(group))
                     outs = fn(*[env[t] for t in in_ids])
+                    self.last_dispatch_count += 1
                     for t, v in zip(out_ids, outs):
                         env[t] = v
                         written.append(v)
@@ -127,18 +237,21 @@ class PlanExecutor:
                 for bid in sl.sequential:      # compiled single branches
                     fn, in_ids, out_ids = self._group_callable((bid,))
                     outs = fn(*[env[t] for t in in_ids])
+                    self.last_dispatch_count += 1
                     for t, v in zip(out_ids, outs):
                         env[t] = v
                         written.append(v)
             else:  # sequential mode: everything op-by-op, schedule order
                 for bid in sl.all_branches():
                     self._run_branch_eager(env, bid, written)
-            # per-layer timings must compare completed compute, not async
-            # dispatch latency
-            jax.block_until_ready(written)
+            # sequential is the barrier-synchronized baseline; parallax only
+            # barriers here under profile=True (honest layer timings)
+            if self.profile or self.mode == "sequential":
+                self._block(written)
             timings.append(
                 LayerTiming(sl.layer_index, time.perf_counter() - t0, width))
         outs = {t: env[t] for t in graph.outputs}
+        self._block(list(outs.values()))
         return RunResult(outs, timings)
 
     def _run_branch_eager(self, env, branch_id: int,
@@ -146,6 +259,7 @@ class PlanExecutor:
         graph = self.plan.graph
         for nid in self.plan.branches[branch_id].nodes:
             node = graph.nodes[nid]
+            self.last_dispatch_count += 1
             outs = node.fn(*[env[t] for t in node.inputs])
             if not isinstance(outs, (tuple, list)):
                 outs = (outs,)

@@ -8,6 +8,9 @@ Table 7 (Nodes / Layers / Par-Layers / Max-Branches).
 
 from __future__ import annotations
 
+import functools
+import hashlib
+import types
 from dataclasses import dataclass, field
 
 from .arena import ArenaPlan
@@ -79,6 +82,98 @@ class ExecutionPlan:
                 peak = max(peak, sum(self.branches[b].peak_memory
                                      for b in group))
         return peak
+
+
+def _code_digest(code: "types.CodeType", h) -> None:
+    h.update(code.co_code)
+    h.update(" ".join(code.co_names).encode())   # co_code stores only name
+    h.update(" ".join(code.co_varnames).encode())  # *indices*; hash the names
+    for c in code.co_consts:
+        if isinstance(c, types.CodeType):
+            _code_digest(c, h)
+        else:
+            h.update(repr(c).encode())
+
+
+def _value_token(v, depth: int = 0):
+    """Fingerprint contribution of a default-arg / closure-cell value.
+
+    Captured callables recurse through :func:`fn_fingerprint` (bounded, so
+    self-referential closures of recursive functions terminate); arrays are
+    deliberately reduced to (shape, dtype) metadata — hashing weight *values*
+    per node would make signatures O(model size).  The compile cache
+    compensates by scoping entries per graph object (core/compile.py), so
+    two graphs whose fns close over different weights can never share
+    compiled callables even though their signatures match.
+    """
+    if depth > 3:
+        return type(v).__qualname__
+    if callable(v):
+        return fn_fingerprint(v, _depth=depth + 1)
+    shape = getattr(v, "shape", None)
+    if isinstance(shape, tuple) and hasattr(v, "dtype"):  # array-like only
+        return ("array", shape, str(v.dtype))
+    if isinstance(v, (tuple, list)):
+        return tuple(_value_token(x, depth) for x in v)
+    if isinstance(v, (int, float, str, bytes, bool, frozenset, type(None))):
+        return repr(v)
+    return type(v).__qualname__
+
+
+def fn_fingerprint(fn, _depth: int = 0):
+    """Stable fingerprint of a node's executable ``fn``.
+
+    Hashes bytecode, referenced names, and constants (recursively through
+    nested code objects), plus default arguments and closure-cell values
+    via :func:`_value_token`, so two structurally identical graph builds
+    produce the same fingerprint while different computations (``dot`` vs
+    ``tanh(dot)``, ``exp`` vs ``log``) do not.
+    """
+    if fn is None:
+        return None
+    if isinstance(fn, functools.partial):
+        return ("partial", fn_fingerprint(fn.func, _depth), repr(fn.args),
+                repr(sorted(fn.keywords.items())))
+    code = getattr(fn, "__code__", None)
+    if code is None:  # builtin / callable object
+        return ("callable", getattr(type(fn), "__qualname__", str(type(fn))))
+    h = hashlib.blake2b(digest_size=16)
+    _code_digest(code, h)
+    h.update(repr(_value_token(getattr(fn, "__defaults__", None),
+                               _depth)).encode())
+    for cell in (getattr(fn, "__closure__", None) or ()):
+        try:
+            v = cell.cell_contents
+        except ValueError:  # empty cell (still being initialized)
+            v = "<empty-cell>"
+        h.update(repr(_value_token(v, _depth)).encode())
+    return (getattr(fn, "__qualname__", ""), h.hexdigest())
+
+
+def plan_signature(plan: ExecutionPlan):
+    """Hashable structural signature of a plan — the compile-cache key.
+
+    Covers the graph (nodes, op classes, tensor wiring, shapes/dtypes, fn
+    fingerprints), the branch decomposition, and the §3.3 schedule.  Two
+    plans with equal signatures lower to the same fused callables, so the
+    schedule compiler (core/compile.py) shares compiled artifacts across
+    fresh executors and repeated ``compile_schedule`` calls.
+    """
+    g = plan.graph
+    nodes = tuple(
+        (nid, n.name, n.op_class, n.inputs, n.outputs, fn_fingerprint(n.fn))
+        for nid, n in sorted(g.nodes.items()))
+    tensors = tuple((tid, t.spec.static_shape, t.spec.dtype)
+                    for tid, t in sorted(g.tensors.items()))
+    branches = tuple((bid, tuple(b.nodes))
+                     for bid, b in sorted(plan.branches.items()))
+    sched = tuple(
+        (sl.layer_index,
+         tuple(tuple(grp) for grp in sl.parallel_groups),
+         tuple(sl.sequential))
+        for sl in plan.schedule.layers)
+    io = (tuple(g.inputs), tuple(g.outputs), tuple(g.params))
+    return (nodes, tensors, branches, sched, io)
 
 
 def graph_stats(graph: Graph) -> GraphStats:

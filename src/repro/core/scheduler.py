@@ -61,7 +61,8 @@ def greedy_select(peak_mems: "dict[int, int]", candidates: "list[int]",
         if total + m <= budget:
             chosen.append(bid)
             total += m
-    deferred = [b for b in candidates if b not in chosen]
+    chosen_set = set(chosen)
+    deferred = [b for b in candidates if b not in chosen_set]
     return sorted(chosen), sorted(deferred)
 
 

@@ -1,0 +1,15 @@
+"""Version-compat shims for Pallas across jax releases.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+kernels import the name from here so one source tree runs on both sides
+of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -55,4 +55,16 @@ def parallel_branches(xs, ws, interpret=True, block_m=8, block_n=128,
     return [out[i, :xs[i].shape[0], :N] for i in range(len(xs))]
 
 
-__all__ = ["branch_matmul_op", "branch_matmul_ref", "parallel_branches"]
+def grouped_branch_matmul(xs, ws, interpret=None, **blocks):
+    """Backend-aware entry point for the schedule compiler (core/compile.py).
+
+    Identical semantics to :func:`parallel_branches`; picks the compiled
+    Pallas kernel on TPU and interpreter mode elsewhere unless overridden.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return parallel_branches(xs, ws, interpret=interpret, **blocks)
+
+
+__all__ = ["branch_matmul_op", "branch_matmul_ref", "grouped_branch_matmul",
+           "parallel_branches"]

@@ -23,8 +23,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheduler import greedy_select
-from repro.models.attention import fill_kv_cache
-from repro.models.transformer import forward_lm
 from .kv_cache import KVCacheManager, request_peak_bytes
 from .sampling import greedy as greedy_sample
 
@@ -51,7 +49,8 @@ class ServingEngine:
     """Batched prefill + decode with §3.3 greedy memory admission."""
 
     def __init__(self, api, params, hbm_budget_bytes: int,
-                 max_batch: int = 8, margin: float = 0.4):
+                 max_batch: int = 8, margin: float = 0.4,
+                 prefill_chunk: int = 16):
         self.api = api
         self.cfg = api.cfg
         self.params = params
@@ -59,9 +58,11 @@ class ServingEngine:
         self.kv = KVCacheManager(self.cfg,
                                  int(hbm_budget_bytes * (1.0 - margin)))
         self.max_batch = max_batch
+        self.prefill_chunk = max(1, prefill_chunk)
         self.queue: list[Request] = []
         self.completed: dict[int, Completion] = {}
         self._decode = jax.jit(api.decode_fn)
+        self._prefill_chunk_fn = jax.jit(self._make_prefill_chunk_fn())
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -81,9 +82,38 @@ class ServingEngine:
         self.queue = [r for r in self.queue if r.id not in chosen_ids]
         return chosen
 
+    def _make_prefill_chunk_fn(self):
+        """Multi-token prefill chunk: an in-trace ``lax.scan`` steps decode
+        over every position of the chunk, so one dispatch consumes
+        ``chunk`` tokens.  Stepping decode (rather than a fused forward)
+        keeps one code path for every architecture, incl. SSM state."""
+        decode = self.api.decode_fn
+        cfg = self.cfg
+
+        def run_chunk(params, caches, toks, start):
+            # toks: (B, C) int32; start: scalar int32 cache position
+            B = toks.shape[0]
+
+            def step(carry, tok_col):
+                caches, pos = carry
+                batch = {"tokens": tok_col[:, None], "cache_len": pos}
+                if cfg.frontend == "vision_patches":
+                    batch["positions3"] = jnp.broadcast_to(pos, (3, B, 1))
+                logits, caches = decode(params, caches, batch)
+                return (caches, pos + 1), logits
+
+            (caches, _), logits_seq = jax.lax.scan(
+                step, (caches, jnp.asarray(start, jnp.int32)),
+                jnp.swapaxes(toks, 0, 1))
+            return logits_seq[-1], caches
+
+        return run_chunk
+
     def _batched_prefill(self, batch_reqs):
         """Left-pad-free batched prefill: pad prompts to the max length,
-        run one forward, build caches from the k/v of real positions."""
+        then consume them in multi-token chunks — O(S/chunk) dispatches
+        instead of O(S) (the last, possibly shorter, chunk traces once
+        per distinct remainder width)."""
         cfg = self.cfg
         B = len(batch_reqs)
         max_prompt = max(len(r.prompt) for r in batch_reqs)
@@ -94,16 +124,13 @@ class ServingEngine:
         toks = jnp.asarray(toks)
 
         caches = self.api.init_caches(B, max_ctx, jnp.dtype(cfg.dtype))
-        # prefill by stepping decode over prompt positions keeps one code
-        # path for every architecture (incl. SSM state); engines at scale
-        # would use the fused prefill kernel instead.
         logits = None
-        for t in range(max_prompt):
-            batch = {"tokens": toks[:, t:t + 1],
-                     "cache_len": jnp.asarray(t, jnp.int32)}
-            if cfg.frontend == "vision_patches":
-                batch["positions3"] = jnp.full((3, B, 1), t, jnp.int32)
-            logits, caches = self._decode(self.params, caches, batch)
+        t = 0
+        while t < max_prompt:
+            chunk = toks[:, t:t + self.prefill_chunk]
+            logits, caches = self._prefill_chunk_fn(
+                self.params, caches, chunk, t)
+            t += chunk.shape[1]
         return logits, caches, max_prompt
 
     def run(self, max_rounds: int = 64) -> "dict[int, Completion]":
