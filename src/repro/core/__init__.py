@@ -15,8 +15,10 @@ from .arena import (ArenaPlan, BumpAllocator, SlabPool, plan_branch_arena,
 from .balance import DEFAULT_BETA, LayerGroups, balance_ratio, group_layer
 from .classify import (Branch, annotate_workloads, branch_dependencies,
                        classify_nodes, extract_branches)
-from .compile import (CompiledLayer, CompiledSchedule, CompileStats,
-                      clear_compile_cache, compile_schedule, gemm_positions)
+from .compile import (CompiledHeteroSchedule, CompiledLayer, CompiledSchedule,
+                      CompiledSegment, CompileStats, HeteroCompileStats,
+                      clear_compile_cache, compile_hetero_schedule,
+                      compile_schedule, gemm_positions)
 from .executor import ArenaExecutor, PlanExecutor, RunResult, make_subgraph_fn
 from .flops import (attention_flops, conv2d_flops, elementwise_flops,
                     matmul_flops, misc_flops, pooling_flops, ssd_scan_flops)

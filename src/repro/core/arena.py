@@ -16,6 +16,7 @@ originating branch's arena (§3.2 "Handling Dynamic Tensor Shapes").
 
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
 
 from .graph import Graph
@@ -47,8 +48,7 @@ class BumpAllocator:
         if best >= 0:
             off, sz = self.free_list.pop(best)
             if sz > size:
-                self.free_list.append((off + size, sz - size))
-                self.free_list.sort()
+                bisect.insort(self.free_list, (off + size, sz - size))
             self.reuse_hits += 1
             return off
         off = self.bump
@@ -56,17 +56,21 @@ class BumpAllocator:
         return off
 
     def free(self, offset: int, size: int) -> None:
+        """O(log n) insert + O(1) coalescing with the two adjacent blocks
+        (the list stays sorted by offset, so neighbors are the only merge
+        candidates — no full re-sort per free)."""
         size = _align(max(size, 1))
-        self.free_list.append((offset, size))
-        self.free_list.sort()
-        # Coalesce adjacent blocks to fight fragmentation.
-        merged: list[tuple] = []
-        for off, sz in self.free_list:
-            if merged and merged[-1][0] + merged[-1][1] == off:
-                merged[-1] = (merged[-1][0], merged[-1][1] + sz)
-            else:
-                merged.append((off, sz))
-        self.free_list = [(o, s) for o, s in merged]
+        lst = self.free_list
+        i = bisect.bisect_left(lst, (offset, size))
+        start, end = offset, offset + size
+        if i > 0 and lst[i - 1][0] + lst[i - 1][1] == start:
+            i -= 1
+            start = lst[i][0]
+            lst.pop(i)
+        if i < len(lst) and lst[i][0] == end:
+            end += lst[i][1]
+            lst.pop(i)
+        lst.insert(i, (start, end - start))
 
     @property
     def high_water(self) -> int:
@@ -178,9 +182,11 @@ class SlabPool:
     arenas combined; ``sum_of_arena_sizes`` would be the no-sharing cost.
     """
 
+    _KEY = staticmethod(lambda s: (s.size, s.id))
+
     def __init__(self) -> None:
-        self._free: list[Slab] = []
-        self._next = 0
+        self._free: list[Slab] = []     # sorted by (size, id): best fit is
+        self._next = 0                  # the first adequate slab
         self.total_allocated = 0
         self.in_use = 0
         self.peak_bytes = 0
@@ -188,12 +194,9 @@ class SlabPool:
 
     def acquire(self, size: int) -> Slab:
         size = _align(max(size, 1))
-        best = -1
-        for i, s in enumerate(self._free):
-            if s.size >= size and (best < 0 or s.size < self._free[best].size):
-                best = i
-        if best >= 0:
-            slab = self._free.pop(best)
+        i = bisect.bisect_left(self._free, (size, -1), key=self._KEY)
+        if i < len(self._free):
+            slab = self._free.pop(i)
             self.reuse_count += 1
         else:
             slab = Slab(self._next, size)
@@ -205,4 +208,4 @@ class SlabPool:
 
     def release(self, slab: Slab) -> None:
         self.in_use -= slab.size
-        self._free.append(slab)
+        bisect.insort(self._free, slab, key=self._KEY)

@@ -157,6 +157,49 @@ class CompiledSchedule:
         return 1 if self.whole is not None else len(self.layers)
 
 
+@dataclass
+class CompiledSegment:
+    """One fused callable per (scheduled layer, logical device).
+
+    ``dynamic=True`` segments carry no callable: they are control-flow
+    regions the heterogeneous runtime executes host-side through
+    ``repro.hetero.dynamic`` (per-subgraph compile cache) instead of
+    tracing them into a fused computation.
+    """
+
+    layer_index: int
+    device: "tuple[str, int]"           # logical (kind, index)
+    fn: "Callable | None"               # None for dynamic segments
+    in_ids: "tuple[int, ...]"
+    out_ids: "tuple[int, ...]"
+    width: int
+    branch_ids: "tuple[int, ...]"
+    node_ids: "tuple[int, ...]" = ()    # set for dynamic segments
+    dynamic: bool = False
+
+
+@dataclass(frozen=True)
+class HeteroCompileStats:
+    segments: int             # dispatches per run (incl. dynamic regions)
+    dynamic_regions: int
+    devices: "tuple[tuple, ...]"        # logical devices with >= 1 segment
+    batched_groups: int       # groups intact on one device AND batchable
+    gemm_sites: int
+
+
+@dataclass
+class CompiledHeteroSchedule:
+    segments: "list[CompiledSegment]"   # layer-major, device-sorted
+    stats: HeteroCompileStats
+    use_branch_kernel: bool
+
+    def dispatches_per_run(self) -> int:
+        return len(self.segments)
+
+    def segments_on(self, device: "tuple[str, int]"):
+        return [s for s in self.segments if s.device == device]
+
+
 def _apply_node(env: dict, node: Node) -> None:
     outs = node.fn(*[env[t] for t in node.inputs])
     if not isinstance(outs, (tuple, list)):
@@ -309,5 +352,92 @@ def compile_schedule(plan: ExecutionPlan, *, whole_plan: bool = False,
     compiled = CompiledSchedule(layers=layers, whole=whole, stats=stats,
                                 use_branch_kernel=use_branch_kernel,
                                 donate=donate)
+    per_graph[key] = compiled
+    return compiled
+
+
+def compile_hetero_schedule(plan: ExecutionPlan, *,
+                            use_branch_kernel: bool = True
+                            ) -> CompiledHeteroSchedule:
+    """Lower a *placed* plan into one fused callable per (layer, device).
+
+    Each scheduled layer is split by the plan's
+    :class:`~repro.hetero.placement.PlacementPlan`: branches sharing a
+    logical device trace into one jitted segment; a §3.1-balanced group
+    stays a parallel group (grouped-GEMM eligible) only when placement
+    kept it intact on a single device — round-robined groups trade kernel
+    batching for device-level parallelism.  Dynamic (control-flow)
+    branches become fn-less segments executed by ``hetero/dynamic.py``.
+
+    All branches within one scheduled layer are mutually independent (the
+    §3.1 layer property), so a layer's segments may dispatch concurrently
+    on their devices; the runtime orders them deterministically.  Cached
+    like :func:`compile_schedule`; the plan signature already covers the
+    placement.
+    """
+    from .scheduler import ScheduledLayer
+    placement = plan.placement
+    if placement is None:
+        raise ValueError("plan has no placement — heterogenize() it first "
+                         "(repro.hetero)")
+    use_branch_kernel = use_branch_kernel and grouped_branch_matmul is not None
+    per_graph = _COMPILE_CACHE.setdefault(plan.graph, {})
+    key = ("hetero", plan_signature(plan), use_branch_kernel)
+    cached = per_graph.get(key)
+    if cached is not None:
+        return cached
+
+    batch_map = _batch_map(plan, use_branch_kernel)
+    assign = placement.assignments
+    segments: list[CompiledSegment] = []
+    intact_batched: set = set()
+    for sl in plan.schedule.layers:
+        per_dev: dict[tuple, ScheduledLayer] = {}
+
+        def pseudo(dev: tuple) -> ScheduledLayer:
+            if dev not in per_dev:
+                per_dev[dev] = ScheduledLayer(sl.layer_index)
+            return per_dev[dev]
+
+        dynamic_bids: list[int] = []
+        for group in sl.parallel_groups:
+            static = [b for b in group if not assign[b].dynamic]
+            dynamic_bids.extend(b for b in group if assign[b].dynamic)
+            devs = {assign[b].key for b in static}
+            if static == list(group) and len(devs) == 1:
+                pseudo(devs.pop()).parallel_groups.append(list(group))
+                if tuple(group) in batch_map:
+                    intact_batched.add(tuple(group))
+            else:
+                for b in static:
+                    pseudo(assign[b].key).sequential.append(b)
+        for b in sl.sequential:
+            if assign[b].dynamic:
+                dynamic_bids.append(b)
+            else:
+                pseudo(assign[b].key).sequential.append(b)
+
+        for dev in sorted(per_dev):
+            psl = per_dev[dev]
+            fn, in_ids, out_ids = _lower_region(plan, [psl], batch_map)
+            segments.append(CompiledSegment(
+                sl.layer_index, dev, jax.jit(fn), in_ids, out_ids,
+                psl.width(), tuple(psl.all_branches())))
+        for b in sorted(dynamic_bids):
+            node_ids = tuple(plan.branches[b].nodes)
+            in_ids, out_ids = region_boundary_tensors(plan.graph,
+                                                      set(node_ids))
+            segments.append(CompiledSegment(
+                sl.layer_index, assign[b].key, None, tuple(in_ids),
+                tuple(out_ids), 1, (b,), node_ids, dynamic=True))
+
+    stats = HeteroCompileStats(
+        segments=len(segments),
+        dynamic_regions=sum(1 for s in segments if s.dynamic),
+        devices=tuple(sorted({s.device for s in segments})),
+        batched_groups=len(intact_batched),
+        gemm_sites=sum(len(batch_map[g]) for g in intact_batched))
+    compiled = CompiledHeteroSchedule(segments=segments, stats=stats,
+                                      use_branch_kernel=use_branch_kernel)
     per_graph[key] = compiled
     return compiled

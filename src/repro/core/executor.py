@@ -24,7 +24,14 @@ mode                      unit of dispatch               dispatches / run
 ``parallax`` (fused)      one scheduled layer            O(layers)
 ``parallax`` whole-plan   the entire schedule            1
 ``parallax`` interpreted  one group / one branch         O(groups x layers)
+``parallax-hetero``       one (layer, device) segment    O(layers x devices)
 ========================  =============================  ==================
+
+``parallax-hetero`` executes a *placed* plan across heterogeneous devices
+(repro.hetero): accelerator segments and host fallback segments dispatch
+per device, boundary tensors move via async ``jax.device_put``, and
+control-flow branches run as host-side dynamic regions.  Unplaced plans
+are heterogenized on the fly (``hetero_profile`` / ``n_accel`` kwargs).
 
 Synchronization: with ``profile=False`` (default) the parallax executor
 never blocks mid-run — dispatches stream asynchronously and exactly one
@@ -105,7 +112,7 @@ class RunResult:
 
 
 class PlanExecutor:
-    """Executes an ExecutionPlan in one of the three modes.
+    """Executes an ExecutionPlan in one of the four modes.
 
     Parallax-mode knobs (see module docstring for semantics):
 
@@ -126,12 +133,28 @@ class PlanExecutor:
                  jit_groups: bool = True, *, fused: bool = True,
                  whole_plan: bool = False, profile: bool = False,
                  use_branch_kernel: bool = True,
-                 donate: "bool | None" = None):
-        if mode not in ("reference", "sequential", "parallax"):
+                 donate: "bool | None" = None,
+                 hetero_profile=None, n_accel: "int | None" = None):
+        if mode not in ("reference", "sequential", "parallax",
+                        "parallax-hetero"):
             raise ValueError(f"unknown mode {mode!r}")
-        self.plan = plan
         self.mode = mode
         self.profile = profile
+        self._hetero = None
+        if mode == "parallax-hetero":
+            if whole_plan or not fused or donate is not None:
+                raise ValueError(
+                    "whole_plan/fused/donate are parallax-only knobs; "
+                    "parallax-hetero always dispatches one fused callable "
+                    "per (layer, device) segment")
+            # Deferred import: repro.hetero builds on repro.core.
+            from ..hetero import HeteroExecutor, heterogenize
+            if plan.placement is None:
+                plan = heterogenize(plan, profile=hetero_profile,
+                                    n_accel=n_accel)
+            self._hetero = HeteroExecutor(
+                plan, use_branch_kernel=use_branch_kernel, profile=profile)
+        self.plan = plan
         # "parallax" compiles every scheduled unit; "sequential"/"reference"
         # stay op-by-op like a stock interpreter.
         self.jit_groups = jit_groups and mode == "parallax"
@@ -145,6 +168,15 @@ class PlanExecutor:
         self.sync_count = 0
         self.last_dispatch_count = 0
         self.last_sync_count = 0
+        self.last_transfer_bytes = 0
+        self.last_device_dispatches: dict = {}
+
+    @property
+    def hetero_stats(self):
+        """``HeteroCompileStats`` of the placed schedule (segments, dynamic
+        regions, devices) — None outside ``parallax-hetero`` mode."""
+        return (self._hetero.compiled.stats
+                if self._hetero is not None else None)
 
     # -- group compilation (interpreted path) -------------------------------
 
@@ -164,7 +196,14 @@ class PlanExecutor:
     def __call__(self, env: "dict[int, object]") -> RunResult:
         self.last_dispatch_count = 0
         self.last_sync_count = 0
-        if self.mode == "reference":
+        if self._hetero is not None:
+            result = self._hetero(env)
+            self.last_dispatch_count = self._hetero.last_dispatch_count
+            self.last_sync_count = self._hetero.last_sync_count
+            self.last_transfer_bytes = self._hetero.last_transfer_bytes
+            self.last_device_dispatches = dict(
+                self._hetero.last_device_dispatches)
+        elif self.mode == "reference":
             result = self._run_reference(env)
         elif self.compiled is not None:
             result = self._run_fused(env)

@@ -47,6 +47,10 @@ class ExecutionPlan:
     stats_pre: "GraphStats | None" = None     # original graph ("Pre")
     stats_post: "GraphStats | None" = None    # after delegation ("Post")
     stats_parallax: "GraphStats | None" = None
+    # Heterogeneous device placement (repro.hetero) — None until the plan is
+    # heterogenized; folded into plan_signature so placed plans never share
+    # compiled artifacts with unplaced ones.
+    placement: "object | None" = None         # hetero.placement.PlacementPlan
     attrs: dict = field(default_factory=dict)
 
     # -- memory accounting (Tables 4/5) ------------------------------------
@@ -173,7 +177,9 @@ def plan_signature(plan: ExecutionPlan):
          tuple(sl.sequential))
         for sl in plan.schedule.layers)
     io = (tuple(g.inputs), tuple(g.outputs), tuple(g.params))
-    return (nodes, tensors, branches, sched, io)
+    placement = (plan.placement.signature()
+                 if plan.placement is not None else None)
+    return (nodes, tensors, branches, sched, io, placement)
 
 
 def graph_stats(graph: Graph) -> GraphStats:

@@ -14,14 +14,44 @@ the branch-batch width of the fused kernels).
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 
 DEFAULT_MARGIN = 0.4      # paper: 30-50 % safety margin
 DEFAULT_MAX_PARALLEL = 6  # paper §4.3: max thread count 6
 
+MEM_BUDGET_ENV = "PARALLAX_MEM_BUDGET"
+_SUFFIXES = {"K": 1 << 10, "M": 1 << 20, "G": 1 << 30, "T": 1 << 40}
+
+
+def _parse_bytes(text: str) -> int:
+    """Byte count from '1073741824', '512M', '8G', ... (case-insensitive)."""
+    s = text.strip().upper().removesuffix("B")
+    if s and s[-1] in _SUFFIXES:
+        return int(float(s[:-1]) * _SUFFIXES[s[-1]])
+    return int(s)
+
 
 def query_available_memory() -> int:
-    """Free system memory in bytes (/proc/meminfo MemAvailable)."""
+    """Available memory in bytes for the §3.3 budget.
+
+    Resolution order: the ``PARALLAX_MEM_BUDGET`` env var (explicit
+    operator override — supports K/M/G/T suffixes, e.g. ``4G``), then
+    /proc/meminfo MemAvailable, then an 8 GiB fallback for platforms
+    exposing neither.
+    """
+    env = os.environ.get(MEM_BUDGET_ENV)
+    if env:
+        try:
+            n = _parse_bytes(env)
+        except ValueError as e:
+            raise ValueError(
+                f"unparseable {MEM_BUDGET_ENV}={env!r}") from e
+        if n <= 0:
+            raise ValueError(
+                f"{MEM_BUDGET_ENV}={env!r} must be positive — a zero or "
+                f"negative budget silently serializes every schedule")
+        return n
     try:
         with open("/proc/meminfo") as f:
             for line in f:
@@ -43,21 +73,30 @@ def memory_budget(available: "int | None" = None,
 
 
 def greedy_select(peak_mems: "dict[int, int]", candidates: "list[int]",
-                  budget: int, max_parallel: int = DEFAULT_MAX_PARALLEL):
+                  budget: int, max_parallel: int = DEFAULT_MAX_PARALLEL,
+                  extra_mems: "dict[int, int] | None" = None):
     """Largest-cardinality subset under the memory budget.
 
     Sorting by ascending M_i and absorbing while the running sum fits
     yields a maximum-cardinality feasible subset (exchange argument: any
     feasible subset can be rebuilt from the smallest items).
     Returns ``(chosen, deferred)`` preserving determinism by (M_i, id).
+
+    ``extra_mems`` charges per-branch surcharges on top of M_i — the
+    heterogeneous runtime passes boundary-transfer bytes here
+    (hetero/transfer.py), so a branch whose staged cross-device inputs
+    would blow the budget is deferred even when its compute peak fits.
     """
-    order = sorted(candidates, key=lambda b: (peak_mems[b], b))
+    def cost(b: int) -> int:
+        return peak_mems[b] + (extra_mems.get(b, 0) if extra_mems else 0)
+
+    order = sorted(candidates, key=lambda b: (cost(b), b))
     chosen: list[int] = []
     total = 0
     for bid in order:
         if len(chosen) >= max_parallel:
             break
-        m = peak_mems[bid]
+        m = cost(bid)
         if total + m <= budget:
             chosen.append(bid)
             total += m
@@ -97,12 +136,15 @@ class Schedule:
 def schedule_layers(layer_groups, peak_mems: "dict[int, int]",
                     budget: "int | None" = None,
                     margin: float = DEFAULT_MARGIN,
-                    max_parallel: int = DEFAULT_MAX_PARALLEL) -> Schedule:
+                    max_parallel: int = DEFAULT_MAX_PARALLEL,
+                    extra_mems: "dict[int, int] | None" = None) -> Schedule:
     """Greedy layer scheduling over the refined layer structure.
 
     ``layer_groups`` is a list of ``balance.LayerGroups`` (one per layer).
     Each balanced group is admitted through :func:`greedy_select`; members
     that do not fit the budget fall back to sequential execution.
+    ``extra_mems`` surcharges per-branch costs (e.g. boundary-transfer
+    staging bytes from the heterogeneous runtime) against the budget.
     """
     if budget is None:
         budget = memory_budget(margin=margin)
@@ -111,7 +153,8 @@ def schedule_layers(layer_groups, peak_mems: "dict[int, int]",
         sl = ScheduledLayer(li, sequential=list(groups.sequential))
         for group in groups.parallel_groups:
             chosen, deferred = greedy_select(
-                peak_mems, group, budget, max_parallel)
+                peak_mems, group, budget, max_parallel,
+                extra_mems=extra_mems)
             if len(chosen) >= 2:
                 sl.parallel_groups.append(chosen)
                 sl.sequential.extend(deferred)

@@ -1,0 +1,146 @@
+"""Host-side execution of dynamic (control-flow) subgraphs.
+
+The §3.4 classification forces control-flow operators into Split-Merge
+singleton branches, but until now they were traced inline with everything
+else.  Here they execute as *dynamic regions* on the host: each region is
+a subgraph compiled on first use into its own callable, cached under a
+*shape bucket* so repeated invocations — including ones whose dynamic
+dims vary within a bucket — reuse one compilation.
+
+Buckets
+-------
+
+* ``"exact"`` (default) — the bucket is the concrete shape tuple.  JIT
+  artifacts are shared across calls with identical shapes; new shapes
+  compile fresh.  Always bit-exact.
+* ``"pow2"`` — every dimension rounds up to the next power of two; inputs
+  are zero-padded to the bucket and outputs sliced back.  One compilation
+  serves all shapes in the bucket, at the price of padded FLOPs.  Only
+  sound for *pad-safe* regions (shape-preserving, element-independent:
+  each output element depends only on the matching input element), so it
+  is opt-in per cache.
+
+Regions whose fns perform data-dependent Python control flow cannot be
+traced (``jax.jit`` raises a concretization error); the cache falls back
+to the eager callable permanently for that entry — that *is* the paper's
+CPU fallback, and it is recorded in ``eager_fallbacks`` for inspection.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.executor import make_subgraph_fn
+from ..core.graph import Graph
+
+
+def shape_bucket(shape: tuple, mode: str = "exact") -> tuple:
+    """Bucket key of one concrete shape."""
+    if mode == "exact":
+        return tuple(int(d) for d in shape)
+    if mode == "pow2":
+        return tuple(1 if d <= 1 else 1 << (int(d) - 1).bit_length()
+                     for d in shape)
+    raise ValueError(f"unknown bucket mode {mode!r}")
+
+
+def _pad_to(a, bucket: tuple):
+    pads = [(0, b - s) for s, b in zip(a.shape, bucket)]
+    if all(p == (0, 0) for p in pads):
+        return a
+    return jnp.pad(a, pads)
+
+
+@dataclass
+class _Entry:
+    fn: object                    # current callable (jitted or eager)
+    eager: object                 # always-valid eager fallback
+    in_ids: "tuple[int, ...]"
+    out_ids: "tuple[int, ...]"
+    jitted: bool
+
+
+class DynamicRegionCache:
+    """Per-subgraph compile cache for host-side dynamic regions.
+
+    Keyed on ``(region nodes, input shape buckets)``.  Counters:
+
+    * ``compile_count`` — cache entries built (distinct region/bucket),
+    * ``trace_count``   — actual jit traces performed (Python body runs),
+    * ``hit_count``     — calls served by an existing entry,
+    * ``eager_fallbacks`` — entries demoted to eager execution.
+    """
+
+    def __init__(self, graph: Graph, bucket: str = "exact",
+                 use_jit: bool = True):
+        shape_bucket((1,), bucket)  # validate mode eagerly
+        self.graph = graph
+        self.bucket = bucket
+        self.use_jit = use_jit
+        self._entries: "dict[tuple, _Entry]" = {}
+        self.compile_count = 0
+        self.trace_count = 0
+        self.hit_count = 0
+        self.eager_fallbacks = 0
+
+    def _build(self, node_ids: tuple) -> "tuple[object, tuple, tuple]":
+        fn, in_ids, out_ids = make_subgraph_fn(self.graph, list(node_ids))
+        return fn, tuple(in_ids), tuple(out_ids)
+
+    def entry(self, node_ids: "tuple[int, ...]",
+              arg_shapes: "tuple[tuple, ...]") -> _Entry:
+        key = (tuple(node_ids),
+               tuple(shape_bucket(s, self.bucket) for s in arg_shapes))
+        ent = self._entries.get(key)
+        if ent is not None:
+            self.hit_count += 1
+            return ent
+        eager, in_ids, out_ids = self._build(tuple(node_ids))
+        fn = eager
+        jitted = False
+        if self.use_jit:
+            def traced(*args, _inner=eager):
+                self.trace_count += 1   # Python body runs only while tracing
+                return _inner(*args)
+            fn = jax.jit(traced)
+            jitted = True
+        ent = _Entry(fn, eager, in_ids, out_ids, jitted)
+        self._entries[key] = ent
+        self.compile_count += 1
+        return ent
+
+    def run(self, node_ids: "tuple[int, ...]", args: "tuple") -> tuple:
+        """Execute a region; returns outputs in ``entry.out_ids`` order."""
+        shapes = tuple(tuple(getattr(a, "shape", ())) for a in args)
+        ent = self.entry(node_ids, shapes)
+        call_args = args
+        if self.bucket == "pow2":
+            buckets = [shape_bucket(s, "pow2") for s in shapes]
+            call_args = tuple(_pad_to(jnp.asarray(a), b)
+                              for a, b in zip(args, buckets))
+        if ent.jitted:
+            try:
+                outs = ent.fn(*call_args)
+            except jax.errors.JAXTypeError:
+                # Untraceable fn — data-dependent Python control flow
+                # (TracerBoolConversionError), concretization, or tracer →
+                # numpy conversion (TracerArrayConversionError, e.g. an
+                # np-implemented fallback op): permanently demote this
+                # entry to eager host execution (the CPU fallback).
+                ent.fn = ent.eager
+                ent.jitted = False
+                self.eager_fallbacks += 1
+                outs = ent.fn(*call_args)
+        else:
+            outs = ent.fn(*call_args)
+        if self.bucket == "pow2":
+            # Pad-safe contract: outputs are shape-preserving w.r.t. the
+            # primary input — slice each back to its pre-pad extent.
+            ref = shapes[0] if shapes else ()
+            outs = tuple(o[tuple(slice(0, d) for d in ref)]
+                         if tuple(o.shape) != ref and o.ndim == len(ref)
+                         else o for o in outs)
+        return tuple(outs)

@@ -6,6 +6,7 @@ produces a tensor-id -> array environment covering graph inputs + params.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -174,9 +175,107 @@ def multihead_graph(dim=16, heads=4, seq=8):
     return g, make_inputs
 
 
+def cond_graph(dim=8, branch_len=3, width=2, tail_len=3):
+    """Parallel matmul branches feeding a ``lax.cond``-gated fallback.
+
+    The control-flow node picks its executed branch at runtime (§3.4:
+    forced Split-Merge, unsupported -> host fallback), then a supported
+    matmul tail resumes — an accel -> host -> accel round trip for the
+    heterogeneous runtime."""
+    b = GraphBuilder()
+    x = b.input((dim, dim), name="x")
+    params = []
+    split = b.op("split", "elementwise", [x], [_mm_spec(dim, dim)],
+                 flops=dim * dim, fn=lambda a: a * 0.5 + 0.1)
+    tails = []
+    for w_i in range(width):
+        cur = split
+        for d in range(branch_len):
+            w = b.param((dim, dim), name=f"cw{w_i}_{d}")
+            params.append(w)
+            cur = b.op(f"c{w_i}_mm{d}", "matmul", [cur, w],
+                       [_mm_spec(dim, dim)],
+                       flops=matmul_flops(dim, dim, dim),
+                       fn=lambda a, w: jnp.tanh(jnp.dot(a, w)))
+        tails.append(cur)
+    merged = b.op("merge", "elementwise", tails, [_mm_spec(dim, dim)],
+                  flops=dim * dim * width, fn=lambda *ts: sum(ts))
+    gate = b.op("cond_gate", "control_flow", [merged], [_mm_spec(dim, dim)],
+                flops=0.0, supported=False,
+                fn=lambda a: jax.lax.cond(a.sum() > 0,
+                                          lambda t: t * 1.5 + 1.0,
+                                          lambda t: -t * 0.5, a))
+    cur = gate
+    for d in range(tail_len):
+        w = b.param((dim, dim), name=f"ct_{d}")
+        params.append(w)
+        cur = b.op(f"tail_mm{d}", "matmul", [cur, w], [_mm_spec(dim, dim)],
+                   flops=matmul_flops(dim, dim, dim),
+                   fn=lambda a, w: jnp.dot(a, w) * 0.1)
+    b.mark_output(cur)
+    g = b.build()
+
+    def make_inputs(rng):
+        env = {x: rng.standard_normal((dim, dim), dtype=np.float32)}
+        for p in params:
+            env[p] = rng.standard_normal((dim, dim), dtype=np.float32) * 0.3
+        return env
+
+    return g, make_inputs
+
+
+def while_graph(dim=8, depth=3, max_iters=6):
+    """Matmul chain -> bounded ``lax.while_loop`` fallback -> matmul chain.
+
+    The loop's trip count is data-dependent but bounded by ``max_iters``
+    (§3.2 dynamic-shape discipline applied to control flow): classified
+    Split-Merge, executed as a host-side dynamic region."""
+    b = GraphBuilder()
+    x = b.input((dim, dim), name="x")
+    params = []
+
+    def mm_chain(cur, tag):
+        for i in range(depth):
+            w = b.param((dim, dim), name=f"{tag}_w{i}")
+            params.append(w)
+            cur = b.op(f"{tag}_mm{i}", "matmul", [cur, w],
+                       [_mm_spec(dim, dim)],
+                       flops=matmul_flops(dim, dim, dim),
+                       fn=lambda a, w: jnp.dot(a, w) * 0.2)
+        return cur
+
+    head = mm_chain(x, "pre")
+
+    def bounded_while(a, _n=max_iters):
+        def cond(s):
+            return (s[0] < _n) & (jnp.abs(s[1]).sum() > 1e-3)
+
+        def body(s):
+            return (s[0] + 1, s[1] * 0.5 + 0.01)
+
+        return jax.lax.while_loop(cond, body, (0, a))[1]
+
+    loop = b.op("bounded_while", "control_flow", [head],
+                [_mm_spec(dim, dim)], flops=0.0, supported=False,
+                fn=bounded_while)
+    tail = mm_chain(loop, "post")
+    b.mark_output(tail)
+    g = b.build()
+
+    def make_inputs(rng):
+        env = {x: rng.standard_normal((dim, dim), dtype=np.float32)}
+        for p in params:
+            env[p] = rng.standard_normal((dim, dim), dtype=np.float32) * 0.4
+        return env
+
+    return g, make_inputs
+
+
 ALL_ZOO = {
     "chain": chain_graph,
+    "cond": cond_graph,
     "diamond": diamond_graph,
     "heterogeneous": heterogeneous_graph,
     "multihead": multihead_graph,
+    "while": while_graph,
 }

@@ -95,6 +95,73 @@ def test_branch_peak_memory_positive():
         assert branch_peak_memory(g, b.nodes) > 0
 
 
+def test_bump_allocator_free_keeps_sorted_coalesced_list():
+    """The bisect-based free path must keep the free list sorted by offset
+    with adjacent blocks merged, regardless of free order."""
+    a = BumpAllocator()
+    offs = [a.allocate(64) for _ in range(8)]
+    hw = a.high_water
+    for o in (offs[3], offs[1], offs[5], offs[7], offs[0], offs[6],
+              offs[2], offs[4]):
+        a.free(o, 64)
+        assert a.free_list == sorted(a.free_list)
+        for (o1, s1), (o2, _) in zip(a.free_list, a.free_list[1:]):
+            assert o1 + s1 < o2          # no unmerged adjacency survives
+    # everything returned: one block spanning the arena, high-water intact
+    assert a.free_list == [(0, hw)]
+    assert a.high_water == hw
+
+
+def test_bump_allocator_high_water_unchanged_by_frees():
+    """Frees (and reuse through the free list) never move the bump pointer:
+    a randomized alloc/free pattern ends with the same high-water as the
+    eager re-sorting implementation produced."""
+    rng = np.random.default_rng(0)
+    a = BumpAllocator()
+    live: list = []
+    waters = []
+    for _ in range(200):
+        if live and rng.random() < 0.45:
+            off, sz = live.pop(rng.integers(len(live)))
+            hw = a.high_water
+            a.free(off, sz)
+            assert a.high_water == hw    # free never changes high-water
+        else:
+            sz = int(rng.integers(1, 512))
+            live.append((a.allocate(sz), sz))
+        waters.append(a.high_water)
+    assert waters == sorted(waters)      # bump only ever grows
+    assert a.reuse_hits > 0
+    for off, sz in live:
+        a.free(off, sz)
+    assert a.free_list == [(0, a.high_water)]
+
+
+def test_plan_arena_high_water_matches_known_values():
+    """End-to-end: arena plans over the zoo keep the exact high-water the
+    pre-bisect allocator produced (chain reuses two slots forever)."""
+    g, _ = chain_graph(depth=8, dim=16)
+    b = extract_branches(g)[0]
+    plan, _ = plan_branch_arena(g, b.id, b.nodes)
+    assert plan.size == 2 * 16 * 16 * 4  # two live buffers, 64B-aligned
+    for gf in (diamond_graph, multihead_graph):
+        g, _ = gf()
+        for br in extract_branches(g):
+            p, lts = plan_branch_arena(g, br.id, br.nodes)
+            assert p.size >= peak_memory_linear_scan(lts)
+
+
+def test_slab_pool_best_fit_is_smallest_adequate():
+    pool = SlabPool()
+    big = pool.acquire(4096)
+    small = pool.acquire(128)
+    pool.release(big)
+    pool.release(small)
+    got = pool.acquire(100)      # must reuse the 128B slab, not the 4K one
+    assert got.id == small.id
+    assert pool.reuse_count == 1
+
+
 def test_slab_pool_cross_arena_sharing():
     pool = SlabPool()
     s1 = pool.acquire(1000)

@@ -4,7 +4,8 @@ import pytest
 
 from repro.core import (Branch, LayerGroups, balance_ratio, compile_plan,
                         greedy_select, group_layer, memory_budget,
-                        ParallaxConfig, schedule_layers)
+                        ParallaxConfig, query_available_memory,
+                        schedule_layers)
 from graph_zoo import diamond_graph, multihead_graph
 
 
@@ -65,6 +66,38 @@ def test_memory_budget_margin():
     assert memory_budget(available=100, margin=0.4) == 60
     with pytest.raises(ValueError):
         memory_budget(available=100, margin=1.5)
+
+
+def test_memory_budget_env_override(monkeypatch):
+    """PARALLAX_MEM_BUDGET pins the queried memory (with K/M/G suffixes) —
+    no silent fallback when the operator set an explicit budget."""
+    monkeypatch.setenv("PARALLAX_MEM_BUDGET", "1000")
+    assert query_available_memory() == 1000
+    assert memory_budget(margin=0.4) == 600
+    monkeypatch.setenv("PARALLAX_MEM_BUDGET", "4G")
+    assert query_available_memory() == 4 << 30
+    monkeypatch.setenv("PARALLAX_MEM_BUDGET", "512M")
+    assert query_available_memory() == 512 << 20
+    monkeypatch.setenv("PARALLAX_MEM_BUDGET", "not-a-size")
+    with pytest.raises(ValueError, match="PARALLAX_MEM_BUDGET"):
+        query_available_memory()
+    for bad in ("0", "-8G"):         # non-positive would silently serialize
+        monkeypatch.setenv("PARALLAX_MEM_BUDGET", bad)
+        with pytest.raises(ValueError, match="positive"):
+            query_available_memory()
+    monkeypatch.delenv("PARALLAX_MEM_BUDGET")
+    assert query_available_memory() > 0    # /proc/meminfo (or fallback)
+
+
+def test_schedule_layers_extra_mems_defer():
+    """Transfer surcharges flow through schedule_layers into deferral."""
+    peak = {0: 50, 1: 50}
+    groups = [LayerGroups(parallel_groups=[[0, 1]])]
+    assert schedule_layers(groups, peak, budget=100).max_width() == 2
+    charged = schedule_layers(groups, peak, budget=100,
+                              extra_mems={1: 10})
+    assert charged.max_width() == 1
+    assert sorted(charged.layers[0].all_branches()) == [0, 1]
 
 
 def test_schedule_never_exceeds_budget():

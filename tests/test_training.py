@@ -44,7 +44,11 @@ def test_microbatched_grads_match_full_batch():
                                rtol=1e-5)
     err = max(jax.tree.leaves(jax.tree.map(
         lambda a, b: float(jnp.abs(a - b).max()), p1, p2)))
-    assert err < 5e-5, f"microbatched update diverges: {err}"
+    # f32 reduction reassociation differs between the full-batch and
+    # accumulated paths (and again when XLA partitions across forced
+    # multi-device CPU platforms); a real accumulation bug is orders of
+    # magnitude larger than this slack.
+    assert err < 2e-4, f"microbatched update diverges: {err}"
 
 
 def test_training_loop_learns():
