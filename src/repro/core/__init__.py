@@ -38,7 +38,7 @@ from .pipeline import (MOBILE_CONFIG, TPU_CONFIG, ParallaxConfig,
 from .plan import (ExecutionPlan, GraphStats, fn_fingerprint, graph_stats,
                    plan_signature)
 from .scheduler import (Schedule, ScheduledLayer, greedy_select,
-                        memory_budget, query_available_memory,
-                        schedule_layers)
+                        incremental_select, memory_budget,
+                        query_available_memory, schedule_layers)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

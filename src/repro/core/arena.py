@@ -30,25 +30,33 @@ def _align(n: int, a: int = ALIGN) -> int:
 
 
 class BumpAllocator:
-    """Bump pointer + coalescing best-fit free list (one arena)."""
+    """Bump pointer + coalescing best-fit free list (one arena).
+
+    Two mirrored views of the free set are kept in sync: ``free_list``
+    sorted by offset (for O(1) neighbor coalescing on free) and
+    ``_by_size`` sorted by (size, offset) (for O(log n) best-fit on
+    allocate, mirroring ``SlabPool._KEY``).  Ties on size resolve to the
+    lowest offset — the same block the previous linear scan chose.
+    """
 
     def __init__(self) -> None:
         self.bump = 0
         self.free_list: list[tuple] = []   # sorted [(offset, size), ...]
+        self._by_size: list[tuple] = []    # sorted [(size, offset), ...]
         self.reuse_hits = 0
 
     def allocate(self, size: int) -> int:
         size = _align(max(size, 1))
-        # Best-fit over the free list (paper: "reclaimed into a free list
-        # for reuse by subsequent tensors").
-        best = -1
-        for i, (off, sz) in enumerate(self.free_list):
-            if sz >= size and (best < 0 or sz < self.free_list[best][1]):
-                best = i
-        if best >= 0:
-            off, sz = self.free_list.pop(best)
+        # Best-fit via the size-ordered index (paper: "reclaimed into a
+        # free list for reuse by subsequent tensors").
+        i = bisect.bisect_left(self._by_size, (size, -1))
+        if i < len(self._by_size):
+            sz, off = self._by_size.pop(i)
+            j = bisect.bisect_left(self.free_list, (off, sz))
+            self.free_list.pop(j)
             if sz > size:
                 bisect.insort(self.free_list, (off + size, sz - size))
+                bisect.insort(self._by_size, (sz - size, off + size))
             self.reuse_hits += 1
             return off
         off = self.bump
@@ -65,12 +73,19 @@ class BumpAllocator:
         start, end = offset, offset + size
         if i > 0 and lst[i - 1][0] + lst[i - 1][1] == start:
             i -= 1
-            start = lst[i][0]
-            lst.pop(i)
+            o, s = lst.pop(i)
+            start = o
+            self._drop_size(s, o)
         if i < len(lst) and lst[i][0] == end:
-            end += lst[i][1]
-            lst.pop(i)
+            o, s = lst.pop(i)
+            end += s
+            self._drop_size(s, o)
         lst.insert(i, (start, end - start))
+        bisect.insort(self._by_size, (end - start, start))
+
+    def _drop_size(self, size: int, offset: int) -> None:
+        j = bisect.bisect_left(self._by_size, (size, offset))
+        self._by_size.pop(j)
 
     @property
     def high_water(self) -> int:

@@ -105,6 +105,29 @@ def greedy_select(peak_mems: "dict[int, int]", candidates: "list[int]",
     return sorted(chosen), sorted(deferred)
 
 
+def incremental_select(peak_mems: "dict[int, int]",
+                       candidates: "list[int]", budget: int,
+                       in_use: int = 0,
+                       max_parallel: int = DEFAULT_MAX_PARALLEL,
+                       extra_mems: "dict[int, int] | None" = None):
+    """Iteration-granularity §3.3 admission against *live* headroom.
+
+    The layer scheduler charges every branch its whole-lifetime peak
+    upper bound against a fresh budget.  A continuously-batched serving
+    engine instead re-runs selection every iteration while earlier
+    admissions still hold memory: the effective budget is the pool's
+    actual headroom ``budget - in_use``, and each candidate is charged
+    only its *next* allocation (e.g. the prompt's cache blocks), not its
+    lifetime maximum — later growth is handled lazily by the block pool.
+
+    Returns ``(chosen, deferred)`` exactly like :func:`greedy_select`.
+    """
+    if in_use < 0:
+        raise ValueError(f"in_use must be >= 0, got {in_use}")
+    return greedy_select(peak_mems, candidates, budget - in_use,
+                         max_parallel, extra_mems=extra_mems)
+
+
 @dataclass
 class ScheduledLayer:
     layer_index: int

@@ -7,9 +7,11 @@ exactly one pass over the cache — the memory-roofline optimum for decode.
 
 Validity masking uses the cache's per-slot absolute-position array
 (`pos`, -1 = empty — ring-buffer semantics from models/attention.py) and
-a scalar ``cache_len``:
+``cache_len`` — a scalar, or a (B,) vector of per-row lengths for the
+continuous-batching slot table, where every batch row sits at its own
+sequence position:
 
-    valid = (0 <= pos <= cache_len) and (window == 0 or pos > cache_len - w)
+    valid = (0 <= pos <= len_b) and (window == 0 or pos > len_b - w)
 
 Shapes: q (B, H, D); k/v (B, K, T, D); pos (T,); out (B, H, D).
 """
@@ -40,7 +42,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    cache_len = len_ref[0]
+    cache_len = len_ref[pl.program_id(0)]     # per-row length (B,)
     pos = pos_ref[...]                                   # (block_k,)
     valid = (pos >= 0) & (pos <= cache_len)
     if window > 0:
@@ -69,7 +71,12 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
 
 def decode_attention(q, k, v, pos, cache_len, *, window: int = 0,
                      block_k: int = 512, interpret: bool = False):
-    """q (B,H,D) x k,v (B,K,T,D), pos (T,), cache_len scalar -> (B,H,D)."""
+    """q (B,H,D) x k,v (B,K,T,D), pos (T,) -> (B,H,D).
+
+    ``cache_len`` is a scalar (all rows at the same position) or a (B,)
+    vector of per-row lengths — the continuous-batching serving path,
+    where every slot of the batch sits at its own sequence position.
+    """
     B, H, D = q.shape
     _, K, T, _ = k.shape
     assert H % K == 0
@@ -79,7 +86,9 @@ def decode_attention(q, k, v, pos, cache_len, *, window: int = 0,
     n_kv = T // block_k
     scale = 1.0 / np.sqrt(D)
     q4 = q.reshape(B, H, 1, D)
-    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    assert cache_len.ndim <= 1, cache_len.shape
+    cache_len = jnp.broadcast_to(cache_len.reshape(-1), (B,))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

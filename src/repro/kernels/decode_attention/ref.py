@@ -6,17 +6,21 @@ import numpy as np
 
 
 def decode_attention_ref(q, k, v, pos, cache_len, window=0):
-    """q (B,H,D) x k,v (B,K,T,D), pos (T,) -> (B,H,D)."""
+    """q (B,H,D) x k,v (B,K,T,D), pos (T,) -> (B,H,D).
+
+    ``cache_len``: scalar or per-row (B,) lengths (continuous batching).
+    """
     B, H, D = q.shape
     K = k.shape[1]
     kr = jnp.repeat(k, H // K, axis=1)
     vr = jnp.repeat(v, H // K, axis=1)
     s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
                    kr.astype(jnp.float32)) / np.sqrt(D)
-    valid = (pos >= 0) & (pos <= cache_len)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    valid = (pos[None, :] >= 0) & (pos[None, :] <= lens[:, None])
     if window > 0:
-        valid &= pos > cache_len - window
-    s = jnp.where(valid[None, None, :], s, -1e30)
+        valid &= pos[None, :] > lens[:, None] - window
+    s = jnp.where(valid[:, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bht,bhtd->bhd", p, vr.astype(jnp.float32))
     return out.astype(q.dtype)

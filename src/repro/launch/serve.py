@@ -1,7 +1,11 @@
 """Serving entry point: batched requests through the §3.3-admitting engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
-        --requests 8 --max-new 16 [--budget-mb 256]
+        --requests 8 --max-new 16 [--budget-mb 256] \
+        [--engine round|continuous]
+
+``--engine continuous`` serves through the iteration-level slot-table
+engine with the slab-backed block KV cache (decoder-only models).
 """
 
 from __future__ import annotations
@@ -14,18 +18,25 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.models import build_model
-from repro.runtime.engine import Request, ServingEngine
+from repro.runtime.engine import (ContinuousEngine, Request,
+                                  ServingEngine)
 
 
 def serve(arch: str, n_requests: int = 8, max_new: int = 16,
           budget_mb: int = 256, prompt_len: int = 12, seed: int = 0,
-          max_batch: int = 4):
+          max_batch: int = 4, engine_mode: str = "round"):
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.key(seed))
-    engine = ServingEngine(api, params,
-                           hbm_budget_bytes=budget_mb << 20,
-                           max_batch=max_batch)
+    if engine_mode == "continuous":
+        engine = ContinuousEngine(api, params,
+                                  hbm_budget_bytes=budget_mb << 20,
+                                  max_batch=max_batch,
+                                  max_context=prompt_len + max_new)
+    else:
+        engine = ServingEngine(api, params,
+                               hbm_budget_bytes=budget_mb << 20,
+                               max_batch=max_batch)
     rng = np.random.default_rng(seed)
     for i in range(n_requests):
         plen = int(rng.integers(4, prompt_len + 1))
@@ -44,7 +55,12 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
     print(f"{len(done)}/{n_requests} requests in {wall:.2f}s; "
           f"peak cache {engine.kv.peak_bytes/2**20:.1f} MiB "
           f"(budget {engine.kv.budget/2**20:.1f} MiB), "
-          f"slab reuse hits {engine.kv.pool.reuse_count}")
+          f"slab reuse hits {engine.kv.reuse_count}")
+    if engine_mode == "continuous":
+        total = sum(len(c.tokens) for c in done.values())
+        print(f"iterations {engine.iterations}, dispatches "
+              f"{engine.dispatches} ({engine.dispatches/total:.2f}/tok), "
+              f"preemptions {engine.preemptions}")
     return done
 
 
@@ -55,8 +71,11 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--budget-mb", type=int, default=256)
+    ap.add_argument("--engine", choices=("round", "continuous"),
+                    default="round")
     args = ap.parse_args()
-    serve(args.arch, args.requests, args.max_new, args.budget_mb)
+    serve(args.arch, args.requests, args.max_new, args.budget_mb,
+          engine_mode=args.engine)
 
 
 if __name__ == "__main__":

@@ -248,17 +248,37 @@ def fill_kv_cache(cache, k, v, start: int = 0):
 
 
 def decode_step_attention(params, cfg, x, cache, cache_len,
-                          positions3=None, window: int = 0):
+                          positions3=None, window: int = 0, active=None):
     """One-token decode: x (B, 1, d) against cache k/v (B, slots, K, D).
 
-    ``cache_len`` (scalar, may be traced) is the number of tokens already
-    generated/prefilled; the new token has absolute position ``cache_len``
-    and is written to slot ``cache_len % slots`` (ring semantics).
+    ``cache_len`` is the number of tokens already generated/prefilled;
+    the new token has absolute position ``cache_len``.
+
+    *Scalar* ``cache_len`` (may be traced): every row is at the same
+    position; the token is written to slot ``cache_len % slots`` (ring
+    semantics via the per-slot ``pos`` array).
+
+    *Vector* ``cache_len`` of shape (B,): each row sits at its own
+    position — the continuous-batching serving path.  Row ``b`` writes
+    slot ``cache_len[b]`` (non-ring caches only: slot t always holds
+    absolute position t, so validity is ``t <= cache_len[b]`` and the
+    ``pos`` array is unused).  ``active`` (B,) bool gates the cache
+    write per row: inactive rows leave every cache entry untouched, so
+    one fixed-shape dispatch can serve a slot table where requests join
+    and leave between iterations.
+
     Returns ``(out (B,1,d), new_cache)``.
     """
     B = x.shape[0]
     slots = cache["k"].shape[1]
     cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 1:
+        return _decode_step_attention_vec(params, cfg, x, cache, cache_len,
+                                          positions3, window, active)
+    if active is not None:
+        raise ValueError(
+            "per-row `active` gating requires vector cache_len (B,): the "
+            "scalar path writes every row's cache unconditionally")
     positions = jnp.broadcast_to(cache_len, (B, 1))
     if positions3 is None and cfg.mrope_sections:
         positions3 = jnp.broadcast_to(positions, (3, B, 1))
@@ -281,3 +301,40 @@ def decode_step_attention(params, cfg, x, cache, cache_len,
     out = jnp.einsum("bsf,fd->bsd", ctx.reshape(B, 1, -1),
                      params["wo"].astype(x.dtype))
     return out, {"k": k, "v": v, "pos": pos}
+
+
+def _decode_step_attention_vec(params, cfg, x, cache, cache_len,
+                               positions3, window, active):
+    """Vector-``cache_len`` decode step (see decode_step_attention).
+
+    PRECONDITION (uncheckable at trace time — the serving engines
+    enforce it via ``max_context`` validation): every ``cache_len[b]``
+    < slots, i.e. a NON-ring cache where slot t holds absolute position
+    t.  A ring cache would silently drop writes (``t == cache_len[b]``
+    never matches once positions wrap) and mis-mask stale slots.
+    """
+    B = x.shape[0]
+    slots = cache["k"].shape[1]
+    positions = cache_len[:, None]                        # (B, 1)
+    if positions3 is None and cfg.mrope_sections:
+        positions3 = jnp.broadcast_to(positions, (3, B, 1))
+    q, k_new, v_new = qkv_project(params, cfg, x, positions, positions3)
+
+    t = jnp.arange(slots, dtype=jnp.int32)[None, :]       # (1, T)
+    write = t == positions                                # (B, T)
+    if active is not None:
+        write &= active[:, None]
+    k = jnp.where(write[:, :, None, None],
+                  k_new.astype(cache["k"].dtype), cache["k"])
+    v = jnp.where(write[:, :, None, None],
+                  v_new.astype(cache["v"].dtype), cache["v"])
+
+    valid = t <= positions
+    w = window or cfg.sliding_window
+    if w > 0:
+        valid &= t > positions - w
+    mask = valid[:, None, None, None, :]                  # (B,1,1,S=1,T)
+    ctx = attend(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    out = jnp.einsum("bsf,fd->bsd", ctx.reshape(B, 1, -1),
+                     params["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v, "pos": cache["pos"]}

@@ -117,16 +117,29 @@ def init_block_cache(cfg, kind, batch, max_len, dtype, ring=False):
 
 
 def decode_block(params, cfg, x, cache, kind, cache_len,
-                 positions3=None, moe_impl="ragged", mesh=None):
-    """Single-token decode block.  x: (B, 1, d)."""
+                 positions3=None, moe_impl="ragged", mesh=None,
+                 active=None):
+    """Single-token decode block.  x: (B, 1, d).
+
+    ``active`` (B,) bool gates per-row cache updates (continuous
+    batching: inactive slot-table rows must not mutate their caches).
+    """
     mixer, _ = kind
     norm = make_norm(cfg.norm_type)
     h = norm(params["norm1"], x)
     if mixer == "attn":
         y, cache = decode_step_attention(params["attn"], cfg, h, cache,
-                                         cache_len, positions3)
+                                         cache_len, positions3,
+                                         active=active)
     else:
-        y, cache = mamba_decode_step(params["mamba"], cfg, h, cache)
+        y, new_cache = mamba_decode_step(params["mamba"], cfg, h, cache)
+        if active is not None:
+            cache = jax.tree.map(
+                lambda n, o: jnp.where(
+                    active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                new_cache, cache)
+        else:
+            cache = new_cache
     x = x + y
     x = shard_decode(x)
     x, _aux = _channel_mix(params, cfg, x, kind, moe_impl, mesh)

@@ -174,20 +174,29 @@ def prefill_encdec(params, cfg, frames, caches):
     return enc, caches
 
 
-def decode_step_encdec(params, cfg, caches, tokens, cache_len):
-    """One decoder token.  tokens: (B, 1) -> (logits (B, V), caches)."""
+def decode_step_encdec(params, cfg, caches, tokens, cache_len,
+                       active=None):
+    """One decoder token.  tokens: (B, 1) -> (logits (B, V), caches).
+
+    ``cache_len`` may be scalar or a (B,) vector of per-row positions;
+    ``active`` gates per-row cache writes (see models/attention.py).
+    """
     norm = make_norm(cfg.norm_type)
     B = tokens.shape[0]
     pos = jnp.asarray(cache_len, jnp.int32)
-    x = (params["embed"].astype(cfg.dtype)[tokens]
-         + jax.lax.dynamic_slice_in_dim(
-             params["dec_pos"].astype(cfg.dtype), pos, 1, axis=0)[None])
+    dec_pos = params["dec_pos"].astype(cfg.dtype)
+    if pos.ndim == 1:                       # per-row positional embedding
+        pe = dec_pos[pos][:, None, :]                     # (B, 1, d)
+    else:
+        pe = jax.lax.dynamic_slice_in_dim(dec_pos, pos, 1, axis=0)[None]
+    x = params["embed"].astype(cfg.dtype)[tokens] + pe
 
     def body(x, scanned):
         bp, self_cache, ck, cv = scanned
         h = norm(bp["norm1"], x)
         y, self_cache = decode_step_attention(bp["self_attn"], cfg, h,
-                                              self_cache, cache_len)
+                                              self_cache, cache_len,
+                                              active=active)
         x = x + y
         h = norm(bp["norm_x"], x)
         x = x + cross_attention(bp["cross_attn"], cfg, h,

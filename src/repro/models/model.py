@@ -94,7 +94,8 @@ def _build_decoder_lm(cfg, distributed, mesh, long_context):
     def decode_fn(params, caches, batch):
         return transformer.decode_lm(
             params, cfg, caches, batch["tokens"], batch["cache_len"],
-            batch.get("positions3"), moe_impl=moe_impl, mesh=mesh)
+            batch.get("positions3"), moe_impl=moe_impl, mesh=mesh,
+            active=batch.get("active"))
 
     def init_caches(batch, max_len, dtype, ring=False):
         return transformer.init_caches(cfg, batch, max_len, dtype, ring)
@@ -182,7 +183,8 @@ def _build_encdec(cfg):
     def decode_fn(params, caches, batch):
         return encdec.decode_step_encdec(params, cfg, caches,
                                          batch["tokens"],
-                                         batch["cache_len"])
+                                         batch["cache_len"],
+                                         active=batch.get("active"))
 
     def init_caches(batch, max_len, dtype, ring=False):
         del ring

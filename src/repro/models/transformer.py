@@ -152,8 +152,13 @@ def prefill_lm(params, cfg, tokens, frontend_embeds=None, positions3=None,
 
 
 def decode_lm(params, cfg, caches, tokens, cache_len, positions3=None,
-              moe_impl="ragged", mesh=None):
-    """One decode step.  tokens: (B, 1) -> (logits (B, V), new caches)."""
+              moe_impl="ragged", mesh=None, active=None):
+    """One decode step.  tokens: (B, 1) -> (logits (B, V), new caches).
+
+    ``cache_len`` may be a scalar (all rows at the same position) or a
+    (B,) vector (continuous batching: per-slot positions); ``active``
+    (B,) bool gates cache writes per row — see models/attention.py.
+    """
     pattern, prefix_len, period, n_rep = structure(cfg)
     x = params["embed"].astype(cfg.dtype)[tokens]      # (B, 1, d)
 
@@ -161,7 +166,7 @@ def decode_lm(params, cfg, caches, tokens, cache_len, positions3=None,
     for i in range(prefix_len):
         x, c = decode_block(params["prefix"][i], cfg, x,
                             caches["prefix"][i], pattern[i], cache_len,
-                            positions3, moe_impl, mesh)
+                            positions3, moe_impl, mesh, active)
         new_prefix.append(c)
 
     new_period = caches["period"]
@@ -174,7 +179,7 @@ def decode_lm(params, cfg, caches, tokens, cache_len, positions3=None,
             for j in range(period):
                 x, c = decode_block(layer_params[j], cfg, x,
                                     layer_caches[j], kinds[j], cache_len,
-                                    positions3, moe_impl, mesh)
+                                    positions3, moe_impl, mesh, active)
                 new_caches.append(c)
             return x, tuple(new_caches)
 

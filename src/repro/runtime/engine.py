@@ -1,30 +1,58 @@
-"""Serving engine with resource-constrained admission — paper §3.3 as a
-first-class serving feature.
+"""Serving engines with resource-constrained admission — paper §3.3 as a
+first-class serving feature, at two scheduling granularities.
 
-The engine queues requests and, per scheduling round, admits the
-largest-cardinality subset whose combined estimated peak cache memory
-fits the HBM budget (``repro.core.scheduler.greedy_select`` — the exact
-algorithm from the paper, applied at request granularity instead of
-branch granularity).  Admitted requests run batched prefill + decode;
-finished requests release their cache slabs back to the pool
-(cross-arena reuse, §3.2).
+:class:`ServingEngine` (round-based, the measured baseline) admits the
+largest-cardinality subset of waiting requests whose combined whole-
+lifetime peak cache memory fits the budget, prefills them as one batch,
+and decodes the whole round to completion before admitting again —
+short requests finish early and their slots idle while the longest
+request drains.
 
-CPU-runnable with reduced configs; the same engine drives the serve
-dry-run path at production scale.
+:class:`ContinuousEngine` (iteration-level) replaces rounds with a
+fixed-capacity **slot table**: ONE pre-traced jitted decode step runs
+over all ``max_batch`` slots with per-row validity masking, so requests
+join and leave between iterations without retracing or re-dispatching
+per request.  Chunked prefill of newly admitted requests interleaves
+with decode iterations instead of blocking the whole batch.  KV memory
+is a :class:`~repro.runtime.kv_cache.BlockKVCache` — per-slot block
+tables over a pool of fixed-size slab blocks, grown lazily and released
+the iteration a request finishes — and admission re-runs the §3.3
+greedy selection *every iteration* against the pool's actual headroom
+(`repro.core.scheduler.incremental_select`).  When growth would exceed
+the budget the engine preempts demote-only: the youngest request is
+paused and requeued (its cache blocks freed, nothing spilled); on
+re-admission its consumed tokens are re-prefilled, which replays the
+identical per-token computation and therefore the identical stream.
+
+Both engines drive the same pre-traced step functions
+(:class:`~repro.runtime.stepper.Stepper`) with per-row cache positions,
+so for decoder-only models they produce bit-identical greedy token
+streams on any mixed-length request set — the continuous engine is a
+pure scheduling optimization.  Two caveats for exact comparison on the
+CPU backend: pass the *same* ``Stepper`` to both engines (two
+separately-jitted twins need not codegen identically), and disable
+asynchronous dispatch (``jax.config.update("jax_cpu_enable_async_
+dispatch", False)``, as ``tests/serving_identity_child.py`` and
+``benchmarks/serving.py`` do) — under async dispatch the XLA CPU
+runtime occasionally computes materially different values for an
+identical dispatch depending on heap layout and machine load, flipping
+greedy argmaxes.  Greedy sampling additionally quantizes logits to
+bfloat16 before the argmax (runtime/sampling.py) so genuine near-tie
+float noise cannot flip token selection either.
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheduler import greedy_select
-from .kv_cache import KVCacheManager, request_peak_bytes
-from .sampling import greedy as greedy_sample
+from repro.core.scheduler import greedy_select, incremental_select
+from .kv_cache import BlockKVCache, KVCacheManager, request_peak_bytes
+from .stepper import Stepper
 
 
 @dataclass
@@ -43,14 +71,34 @@ class Completion:
     tokens: "list[int]" = field(default_factory=list)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    ttft_s: float = 0.0            # run-start -> first generated token
+
+
+def _pad_to_multiple(arr: "np.ndarray", multiple: int) -> "np.ndarray":
+    cols = -(-arr.shape[1] // multiple) * multiple if arr.shape[1] else \
+        multiple
+    out = np.zeros((arr.shape[0], cols), np.int32)
+    out[:, :arr.shape[1]] = arr
+    return out
 
 
 class ServingEngine:
-    """Batched prefill + decode with §3.3 greedy memory admission."""
+    """Round-based batched prefill + decode with §3.3 greedy admission.
+
+    The measured baseline for :class:`ContinuousEngine`: whole-lifetime
+    peak-memory admission (`KVCacheManager`), one monolithic cache slab
+    per request, and round-at-a-time scheduling.  Prefill and decode run
+    through the shared :class:`Stepper`, so every row advances from its
+    own prompt length (length-correct streams) and the fixed-width
+    masked prefill chunk compiles exactly one trace per batch shape
+    regardless of prompt-length remainders.
+    """
 
     def __init__(self, api, params, hbm_budget_bytes: int,
                  max_batch: int = 8, margin: float = 0.4,
-                 prefill_chunk: int = 16):
+                 prefill_chunk: int = 16,
+                 max_context: "int | None" = None,
+                 stepper: "Stepper | None" = None):
         self.api = api
         self.cfg = api.cfg
         self.params = params
@@ -59,18 +107,40 @@ class ServingEngine:
                                  int(hbm_budget_bytes * (1.0 - margin)))
         self.max_batch = max_batch
         self.prefill_chunk = max(1, prefill_chunk)
+        self.max_context = max_context
         self.queue: list[Request] = []
         self.completed: dict[int, Completion] = {}
-        self._decode = jax.jit(api.decode_fn)
-        self._prefill_chunk_fn = jax.jit(self._make_prefill_chunk_fn())
+        # A caller comparing engines bit-for-bit passes one shared
+        # Stepper so both run the very same compiled executables (XLA
+        # CPU codegen of two separately-jitted twins need not be
+        # bit-identical).
+        if stepper is not None and stepper.api is not api:
+            raise ValueError("shared stepper built for a different model")
+        self.stepper = stepper if stepper is not None else Stepper(api)
+        self.dispatch_count = 0
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.id}: empty prompt")
+        if any(r.id == req.id for r in self.queue) \
+                or req.id in self.completed:
+            raise ValueError(f"duplicate request id {req.id}")
+        if self.max_context is not None \
+                and req.context_len() > self.max_context:
+            raise ValueError(
+                f"request {req.id}: context {req.context_len()} exceeds "
+                f"max_context {self.max_context}")
         self.queue.append(req)
+
+    @property
+    def dispatches(self) -> int:
+        return self.dispatch_count
 
     # -- scheduling round ---------------------------------------------------
 
     def _admit(self) -> "list[Request]":
-        """Greedy §3.3 selection over the waiting queue."""
+        """Greedy §3.3 selection over the waiting queue (whole-lifetime
+        peak-memory upper bounds — contrast incremental_select)."""
         if not self.queue:
             return []
         peak = {r.id: request_peak_bytes(self.cfg, r.context_len())
@@ -82,93 +152,431 @@ class ServingEngine:
         self.queue = [r for r in self.queue if r.id not in chosen_ids]
         return chosen
 
-    def _make_prefill_chunk_fn(self):
-        """Multi-token prefill chunk: an in-trace ``lax.scan`` steps decode
-        over every position of the chunk, so one dispatch consumes
-        ``chunk`` tokens.  Stepping decode (rather than a fused forward)
-        keeps one code path for every architecture, incl. SSM state."""
-        decode = self.api.decode_fn
-        cfg = self.cfg
-
-        def run_chunk(params, caches, toks, start):
-            # toks: (B, C) int32; start: scalar int32 cache position
-            B = toks.shape[0]
-
-            def step(carry, tok_col):
-                caches, pos = carry
-                batch = {"tokens": tok_col[:, None], "cache_len": pos}
-                if cfg.frontend == "vision_patches":
-                    batch["positions3"] = jnp.broadcast_to(pos, (3, B, 1))
-                logits, caches = decode(params, caches, batch)
-                return (caches, pos + 1), logits
-
-            (caches, _), logits_seq = jax.lax.scan(
-                step, (caches, jnp.asarray(start, jnp.int32)),
-                jnp.swapaxes(toks, 0, 1))
-            return logits_seq[-1], caches
-
-        return run_chunk
-
-    def _batched_prefill(self, batch_reqs):
-        """Left-pad-free batched prefill: pad prompts to the max length,
-        then consume them in multi-token chunks — O(S/chunk) dispatches
-        instead of O(S) (the last, possibly shorter, chunk traces once
-        per distinct remainder width)."""
-        cfg = self.cfg
-        B = len(batch_reqs)
-        max_prompt = max(len(r.prompt) for r in batch_reqs)
-        max_ctx = max(r.context_len() for r in batch_reqs)
-        toks = np.zeros((B, max_prompt), np.int32)
+    def _run_round(self, batch_reqs, t_run0: float) -> None:
+        """One round over a fixed ``max_batch``-wide batch: rounds with
+        fewer admitted requests pad with inactive rows (n_valid = 0,
+        never active), so every dispatch has one shape — one trace for
+        the whole run, and bitwise row results independent of how many
+        requests a round happened to admit (XLA codegen varies with
+        batch width)."""
+        C = self.prefill_chunk
+        B = self.max_batch
+        n = len(batch_reqs)
+        plens = np.zeros(B, np.int32)
+        max_new = np.zeros(B, np.int32)
+        plens[:n] = [len(r.prompt) for r in batch_reqs]
+        max_new[:n] = [r.max_new_tokens for r in batch_reqs]
+        if self.max_context is not None:
+            max_ctx = self.max_context
+        else:
+            # bucket the per-round cache width so rounds with similar
+            # context lengths share one compiled shape (32-slot steps)
+            need = max(r.context_len() for r in batch_reqs)
+            max_ctx = -(-need // 32) * 32
+        toks = np.zeros((B, int(plens.max())), np.int32)
         for i, r in enumerate(batch_reqs):
             toks[i, :len(r.prompt)] = r.prompt          # right padding
-        toks = jnp.asarray(toks)
+        toks = _pad_to_multiple(toks, C)
 
-        caches = self.api.init_caches(B, max_ctx, jnp.dtype(cfg.dtype))
-        logits = None
-        t = 0
-        while t < max_prompt:
-            chunk = toks[:, t:t + self.prefill_chunk]
-            logits, caches = self._prefill_chunk_fn(
-                self.params, caches, chunk, t)
-            t += chunk.shape[1]
-        return logits, caches, max_prompt
+        caches = self.api.init_caches(B, max_ctx, jnp.dtype(self.cfg.dtype))
+        lens = np.zeros(B, np.int32)
+        first_tok = np.zeros(B, np.int32)
+
+        t0 = time.perf_counter()
+        for t in range(0, int(plens.max()), C):
+            n_valid = np.clip(plens - t, 0, C)
+            self.dispatch_count += 1
+            caches, _, first = self.stepper.prefill_chunk(
+                self.params, caches, toks[:, t:t + C], lens, n_valid)
+            done_here = (t < plens) & (plens <= t + C)
+            if done_here.any():
+                first_host = np.asarray(first)
+                first_tok[done_here] = first_host[done_here]
+            lens += n_valid
+        prefill_s = time.perf_counter() - t0
+        ttft_s = time.perf_counter() - t_run0
+
+        comps = {r.id: Completion(r.id, prefill_s=prefill_s,
+                                  ttft_s=ttft_s)
+                 for r in batch_reqs}
+        count = np.zeros(B, np.int32)       # pad rows stay at 0
+        for i, r in enumerate(batch_reqs):
+            if r.max_new_tokens > 0:        # 0 = prefill-only request
+                comps[r.id].tokens.append(int(first_tok[i]))
+                count[i] = 1
+        last = first_tok.copy()
+
+        t0 = time.perf_counter()
+        while (count < max_new).any():
+            active = count < max_new
+            self.dispatch_count += 1
+            last_dev, caches = self.stepper.decode(
+                self.params, caches, last, lens, active)
+            last = np.asarray(last_dev)
+            lens += active
+            count += active
+            for i, r in enumerate(batch_reqs):
+                if active[i]:
+                    comps[r.id].tokens.append(int(last[i]))
+        decode_s = time.perf_counter() - t0
+
+        for r in batch_reqs:
+            comps[r.id].decode_s = decode_s
+            self.kv.release(r.id)
+            self.completed[r.id] = comps[r.id]
 
     def run(self, max_rounds: int = 64) -> "dict[int, Completion]":
+        t_run0 = time.perf_counter()
         rounds = 0
         while self.queue and rounds < max_rounds:
             rounds += 1
             batch_reqs = self._admit()
             if not batch_reqs:
-                break
+                # between rounds the pool is empty, so an empty round
+                # means no queued request can EVER fit — raise like the
+                # continuous engine instead of silently dropping them
+                smallest = min(
+                    request_peak_bytes(self.cfg, r.context_len())
+                    for r in self.queue)
+                raise MemoryError(
+                    f"no queued request fits: smallest peak {smallest} "
+                    f"bytes, headroom {self.kv.budget - self.kv.in_use}")
             for r in batch_reqs:
                 self.kv.admit(r.id, r.context_len())
+            self._run_round(batch_reqs, t_run0)
+        return self.completed
 
-            t0 = time.perf_counter()
-            logits, caches, pos = self._batched_prefill(batch_reqs)
-            prefill_s = time.perf_counter() - t0
 
-            comps = {r.id: Completion(r.id, prefill_s=prefill_s)
-                     for r in batch_reqs}
-            n_steps = max(r.max_new_tokens for r in batch_reqs)
-            t0 = time.perf_counter()
-            next_tok = greedy_sample(logits)
-            for step in range(n_steps):
-                for i, r in enumerate(batch_reqs):
-                    if step < r.max_new_tokens:
-                        comps[r.id].tokens.append(int(next_tok[i]))
-                if step == n_steps - 1:
-                    break
-                batch = {"tokens": next_tok[:, None],
-                         "cache_len": jnp.asarray(pos + step, jnp.int32)}
-                if self.cfg.frontend == "vision_patches":
-                    batch["positions3"] = jnp.full(
-                        (3, len(batch_reqs), 1), pos + step, jnp.int32)
-                logits, caches = self._decode(self.params, caches, batch)
-                next_tok = greedy_sample(logits)
-            decode_s = time.perf_counter() - t0
+# --------------------------------------------------------------------------
+# continuous batching
+# --------------------------------------------------------------------------
 
-            for r in batch_reqs:
-                comps[r.id].decode_s = decode_s
-                self.kv.release(r.id)
-                self.completed[r.id] = comps[r.id]
+@dataclass
+class _Seq:
+    """A request's serving state (survives preemption)."""
+
+    req: Request
+    gen: "list[int]" = field(default_factory=list)
+    ttft_s: "float | None" = None
+    preempted: bool = False
+
+    def pending_len(self) -> int:
+        """len(pending_prompt()) without materializing it — the per-
+        iteration admission cost query must stay O(1)."""
+        return len(self.req.prompt) + max(len(self.gen) - 1, 0)
+
+    def pending_prompt(self) -> "np.ndarray":
+        """Tokens that must be in the cache before decode resumes: the
+        original prompt plus every *consumed* generated token (the last
+        sampled token has not entered the cache yet)."""
+        if not self.gen:
+            return np.asarray(self.req.prompt, np.int32)
+        return np.concatenate([np.asarray(self.req.prompt, np.int32),
+                               np.asarray(self.gen[:-1], np.int32)])
+
+
+FREE, PREFILL, DECODE = 0, 1, 2
+
+
+class ContinuousEngine:
+    """Iteration-level scheduling over a fixed slot table (decoder-only).
+
+    Every iteration: (1) §3.3 admission against live block-pool headroom
+    fills free slots, (2) one masked prefill chunk advances every
+    prefilling slot by up to ``prefill_chunk`` prompt tokens, (3) block
+    growth (with demote-only preemption of the youngest request when the
+    pool is exhausted), (4) ONE decode dispatch advances every decoding
+    slot.  Caches are allocated once at ``(max_batch, max_context)``;
+    the two step functions trace exactly once for the whole run.
+    """
+
+    def __init__(self, api, params, hbm_budget_bytes: int,
+                 max_batch: int = 8, margin: float = 0.4,
+                 prefill_chunk: int = 16, block_size: int = 16,
+                 max_context: int = 64,
+                 stepper: "Stepper | None" = None):
+        if api.cfg.is_encoder_decoder:
+            raise ValueError("ContinuousEngine serves decoder-only "
+                             "models (encoder-decoder needs an encoder "
+                             "pass the slot table does not schedule)")
+        self.api = api
+        self.cfg = api.cfg
+        self.params = params
+        self.kv = BlockKVCache(self.cfg,
+                               int(hbm_budget_bytes * (1.0 - margin)),
+                               block_size)
+        self.max_batch = max_batch
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.max_context = max_context
+        if stepper is not None and stepper.api is not api:
+            raise ValueError("shared stepper built for a different model")
+        self.stepper = stepper if stepper is not None else Stepper(api)
+        self.dispatch_count = 0
+        self.caches = api.init_caches(max_batch, max_context,
+                                      jnp.dtype(self.cfg.dtype))
+
+        self.slots: "list[_Seq | None]" = [None] * max_batch
+        self.slot_len = np.zeros(max_batch, np.int32)
+        self.slot_phase = np.full(max_batch, FREE, np.int32)
+        self.slot_off = np.zeros(max_batch, np.int32)
+        self.slot_seq = np.zeros(max_batch, np.int64)
+        self.slot_last = np.zeros(max_batch, np.int32)
+        self._slot_prompt: "list[np.ndarray | None]" = [None] * max_batch
+
+        self.waiting: "deque[_Seq]" = deque()
+        self.completed: dict[int, Completion] = {}
+        self.preemptions = 0
+        self.iterations = 0
+        self._admit_counter = 0
+        self._t0: "float | None" = None
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.id}: empty prompt")
+        live = {s.req.id for s in self.slots if s is not None}
+        if any(s.req.id == req.id for s in self.waiting) \
+                or req.id in live or req.id in self.completed:
+            # admission/bookkeeping key on request id — a duplicate
+            # would admit twice against one charged cost
+            raise ValueError(f"duplicate request id {req.id}")
+        if req.context_len() > self.max_context:
+            raise ValueError(
+                f"request {req.id}: context {req.context_len()} exceeds "
+                f"max_context {self.max_context}")
+        self.waiting.append(_Seq(req))
+
+    @property
+    def dispatches(self) -> int:
+        return self.dispatch_count
+
+    @property
+    def num_active(self) -> int:
+        return int((self.slot_phase != FREE).sum())
+
+    # -- iteration phases ---------------------------------------------------
+
+    def _admit(self) -> int:
+        """§3.3 greedy selection against *actual* block-pool headroom —
+        re-run every iteration, charging each candidate only its next
+        allocation (prompt blocks + state), not a lifetime bound.
+
+        Preempted (demoted) requests re-admit FIRST, in queue order,
+        whenever their pending cache fits: cost-sorted greedy_select
+        alone would starve them behind any sustained stream of cheaper
+        fresh requests, forcing unbounded re-prefills."""
+        free = [s for s in range(self.max_batch)
+                if self.slot_phase[s] == FREE]
+        if not free or not self.waiting:
+            return 0
+        fresh = np.zeros(self.max_batch, bool)
+        for seq in [s for s in self.waiting if s.preempted]:
+            if not free:
+                break
+            need = self.kv.bytes_for(seq.pending_len())
+            if need > self.kv.budget:
+                # grown past what the whole pool can ever hold: waiting
+                # would block fresh admission forever — fail it now
+                raise MemoryError(
+                    f"request {seq.req.id}: resumed cache needs {need} "
+                    f"bytes, more than the whole block-pool budget "
+                    f"{self.kv.budget}")
+            if need > self.kv.headroom:
+                break
+            self.waiting.remove(seq)
+            self._place(free.pop(0), seq, fresh)
+        # while any demoted request still waits, fresh work must not
+        # leapfrog it and consume the headroom it is waiting for
+        blocked = any(s.preempted for s in self.waiting)
+        if free and self.waiting and not blocked:
+            by_id = {seq.req.id: seq for seq in self.waiting}
+            costs = {rid: self.kv.bytes_for(seq.pending_len())
+                     for rid, seq in by_id.items()}
+            chosen, _ = incremental_select(
+                costs, list(by_id), self.kv.budget, self.kv.in_use,
+                max_parallel=len(free))
+            chosen_set = set(chosen)
+            for seq in [s for s in self.waiting
+                        if s.req.id in chosen_set]:
+                self._place(free.pop(0), seq, fresh)
+            self.waiting = deque(s for s in self.waiting
+                                 if s.req.id not in chosen_set)
+        if not fresh.any():
+            return 0
+        self.dispatch_count += 1
+        self.caches = self.stepper.reset_rows(self.caches, fresh)
+        return int(fresh.sum())
+
+    def _place(self, slot: int, seq: "_Seq", fresh: "np.ndarray") -> None:
+        prompt = seq.pending_prompt()
+        self.kv.admit(slot, len(prompt))
+        self.slots[slot] = seq
+        self._slot_prompt[slot] = prompt
+        self.slot_phase[slot] = PREFILL
+        self.slot_len[slot] = 0
+        self.slot_off[slot] = 0
+        self.slot_seq[slot] = self._admit_counter
+        self._admit_counter += 1
+        fresh[slot] = True
+
+    def _prefill(self) -> None:
+        """Chunked prefill — dispatched only when the pending prompt
+        tokens amortize a chunk's fixed scan cost (a chunk always runs
+        ``prefill_chunk`` masked steps); short prompt tails instead ride
+        the per-iteration decode dispatch for free (_decode)."""
+        pre = [s for s in range(self.max_batch)
+               if self.slot_phase[s] == PREFILL]
+        if not pre:
+            return
+        remaining = sum(len(self._slot_prompt[s]) - int(self.slot_off[s])
+                        for s in pre)
+        if remaining < self.prefill_chunk:
+            return
+        C = self.prefill_chunk
+        toks = np.zeros((self.max_batch, C), np.int32)
+        n_valid = np.zeros(self.max_batch, np.int32)
+        for s in pre:
+            prompt = self._slot_prompt[s]
+            take = min(C, len(prompt) - int(self.slot_off[s]))
+            toks[s, :take] = prompt[self.slot_off[s]:
+                                    self.slot_off[s] + take]
+            n_valid[s] = take
+        self.dispatch_count += 1
+        self.caches, _, first = self.stepper.prefill_chunk(
+            self.params, self.caches, toks, self.slot_len, n_valid)
+        self.slot_len += n_valid
+        self.slot_off += n_valid
+        first_host: "list[np.ndarray]" = []   # read lazily: syncs
+        for s in pre:
+            if self.slot_off[s] < len(self._slot_prompt[s]):
+                continue                      # more prompt next iteration
+            if not first_host:
+                first_host.append(np.asarray(first))
+            self._complete_prefill(s, lambda s=s: int(first_host[0][s]))
+
+    def _complete_prefill(self, slot: int, get_first_tok) -> None:
+        """Prompt fully consumed: flip the slot to DECODE.  Resumed
+        requests already hold their next token; fresh ones take their
+        first generated token from ``get_first_tok()`` (the argmax at
+        the prompt's last position, whichever dispatch produced it)."""
+        seq = self.slots[slot]
+        self.slot_phase[slot] = DECODE
+        if seq.gen:                           # resumed after preemption
+            self.slot_last[slot] = seq.gen[-1]
+            return
+        if seq.req.max_new_tokens == 0:       # prefill-only request
+            self._finish(slot)
+            return
+        tok = get_first_tok()
+        seq.gen.append(tok)
+        self.slot_last[slot] = tok
+        seq.ttft_s = time.perf_counter() - self._t0
+        if len(seq.gen) >= seq.req.max_new_tokens:
+            self._finish(slot)
+
+    def _grow_or_preempt(self) -> None:
+        """Lazy block growth, oldest request first; demote-only
+        preemption (pause the youngest, spill nothing) on exhaustion."""
+        order = sorted(
+            (s for s in range(self.max_batch)
+             if self.slot_phase[s] == DECODE),
+            key=lambda s: self.slot_seq[s])
+        for s in order:
+            if self.slot_phase[s] != DECODE:
+                continue                      # preempted as a victim
+            while not self.kv.grow(s, int(self.slot_len[s]) + 1):
+                active = [v for v in range(self.max_batch)
+                          if self.slot_phase[v] != FREE]
+                victim = max(active, key=lambda v: self.slot_seq[v])
+                if victim == s and len(active) == 1:
+                    raise MemoryError(
+                        f"block pool budget {self.kv.budget} cannot hold "
+                        f"a single growing request (slot {s}, "
+                        f"{self.slot_len[s] + 1} tokens)")
+                self._preempt(victim)
+                if victim == s:               # the grower IS the youngest
+                    break                     # — demote it, not an elder
+
+    def _preempt(self, slot: int) -> None:
+        seq = self.slots[slot]
+        self.kv.free(slot)
+        self.slots[slot] = None
+        self._slot_prompt[slot] = None
+        self.slot_phase[slot] = FREE
+        seq.preempted = True                  # priority re-admission
+        self.waiting.appendleft(seq)
+        self.preemptions += 1
+
+    def _decode(self) -> None:
+        """ONE dispatch advances every active slot by one token: decode
+        rows feed their last sampled token; rows still holding prompt
+        tokens (short tails the chunk path skipped) feed the next prompt
+        token instead — iteration-level batching à la Orca, so trailing
+        prefill costs zero extra dispatches.  A row consuming its final
+        prompt token gets its first generated token from this very
+        dispatch's argmax."""
+        decoding = self.slot_phase == DECODE
+        prefilling = self.slot_phase == PREFILL
+        active = decoding | prefilling
+        if not active.any():
+            return
+        toks = self.slot_last.copy()
+        for s in np.flatnonzero(prefilling):
+            toks[s] = self._slot_prompt[s][self.slot_off[s]]
+        self.dispatch_count += 1
+        nxt, self.caches = self.stepper.decode(
+            self.params, self.caches, toks, self.slot_len, active)
+        nxt_host = np.asarray(nxt)
+        self.slot_len += active
+        for s in np.flatnonzero(prefilling):
+            self.slot_off[s] += 1
+            if self.slot_off[s] < len(self._slot_prompt[s]):
+                continue
+            self._complete_prefill(int(s), lambda s=s: int(nxt_host[s]))
+        for s in np.flatnonzero(decoding):
+            seq = self.slots[s]
+            tok = int(nxt_host[s])
+            seq.gen.append(tok)
+            self.slot_last[s] = tok
+            if len(seq.gen) >= seq.req.max_new_tokens:
+                self._finish(int(s))
+
+    def _finish(self, slot: int) -> None:
+        """Release the slot's cache blocks the iteration it finishes."""
+        seq = self.slots[slot]
+        self.kv.free(slot)
+        self.slots[slot] = None
+        self._slot_prompt[slot] = None
+        self.slot_phase[slot] = FREE
+        self.completed[seq.req.id] = Completion(
+            seq.req.id, tokens=list(seq.gen),
+            ttft_s=seq.ttft_s if seq.ttft_s is not None else 0.0)
+
+    # -- driver -------------------------------------------------------------
+
+    def step(self) -> None:
+        """One scheduling iteration: admit, prefill a chunk, grow/
+        preempt, decode one token per active slot."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self.iterations += 1
+        admitted = self._admit()
+        if self.num_active == 0:
+            if admitted == 0 and self.waiting:
+                smallest = min(s.pending_len() for s in self.waiting)
+                raise MemoryError(
+                    f"no request fits: smallest pending prompt needs "
+                    f"{self.kv.bytes_for(smallest)} bytes, budget is "
+                    f"{self.kv.budget}")
+            if admitted == 0:
+                return
+        self._prefill()
+        self._grow_or_preempt()
+        self._decode()
+
+    def run(self, max_iters: int = 100_000) -> "dict[int, Completion]":
+        self._t0 = time.perf_counter()
+        it = 0
+        while (self.waiting or self.num_active) and it < max_iters:
+            self.step()
+            it += 1
         return self.completed

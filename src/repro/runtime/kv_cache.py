@@ -8,15 +8,25 @@ The serving engine's HBM picture mirrors the paper's mobile-RAM picture:
   slab (no cross-request reallocation when a request finishes early),
 * *cross-arena reuse*: finished requests' slabs return to a
   :class:`repro.core.arena.SlabPool` and back later requests' arenas.
+
+Two granularities are provided:
+
+* :class:`KVCacheManager` — one monolithic whole-lifetime slab per
+  request (the round-based baseline engine), and
+* :class:`BlockKVCache` — per-slot *block tables* over a pool of
+  fixed-size cache blocks, allocated lazily as sequences grow and
+  released the iteration a request finishes (the continuous-batching
+  engine).  Every block is a :class:`~repro.core.arena.SlabPool` slab,
+  so blocks freed by one request immediately back another (§3.2
+  cross-arena reuse) and admission can run against the pool's *actual*
+  headroom instead of lifetime upper bounds.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
-
-from repro.core.arena import SlabPool
+from repro.core.arena import SlabPool, _align
 
 
 def kv_bytes_per_token(cfg) -> int:
@@ -97,3 +107,133 @@ class KVCacheManager:
     @property
     def peak_bytes(self) -> int:
         return self.pool.peak_bytes
+
+    @property
+    def reuse_count(self) -> int:
+        return self.pool.reuse_count
+
+
+# --------------------------------------------------------------------------
+# block-granular cache (continuous batching)
+# --------------------------------------------------------------------------
+
+class BlockKVCache:
+    """Per-slot block tables over a slab pool of fixed-size KV blocks.
+
+    A *block* covers ``block_size`` token positions of every attention
+    layer's K and V for one sequence; blocks are acquired lazily as a
+    slot's sequence crosses block boundaries and all released the
+    iteration the request finishes.  SSM/conv state is context-length
+    independent, so each slot additionally holds one constant-size
+    *state slab* for its lifetime.  All storage is accounted through one
+    :class:`SlabPool`: since blocks are uniform-size, every block a
+    finished (or preempted) request frees is a perfect best-fit for the
+    next grower — cross-request reuse shows up as ``pool.reuse_count``.
+    """
+
+    def __init__(self, cfg, budget_bytes: int, block_size: int = 16):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.cfg = cfg
+        self.budget = budget_bytes
+        self.block_size = block_size
+        per_tok = kv_bytes_per_token(cfg)
+        sb = state_bytes(cfg)
+        self.block_bytes = _align(per_tok * block_size) if per_tok else 0
+        self.state_bytes = _align(sb) if sb else 0
+        # KV blocks and state slabs live in SEPARATE pools: SlabPool's
+        # best-fit hands out any slab >= the request, so on hybrid
+        # attention+SSM archs a freed state slab could otherwise satisfy
+        # a (smaller) block request and silently charge more bytes than
+        # the headroom check accounted for.
+        self.pool = SlabPool()                      # uniform KV blocks
+        self.state_pool = SlabPool()                # uniform state slabs
+        self._peak = 0
+        self.block_tables: "dict[int, list]" = {}   # slot -> [Slab, ...]
+        self.state_slabs: "dict[int, object]" = {}  # slot -> Slab
+
+    # -- shape inference ----------------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        if self.block_bytes == 0:
+            return 0
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    def bytes_for(self, n_tokens: int) -> int:
+        """Admission cost of a fresh slot holding ``n_tokens`` (prompt
+        blocks + the constant state slab) — what `incremental_select`
+        charges against the pool's live headroom."""
+        return self.blocks_for(n_tokens) * self.block_bytes \
+            + self.state_bytes
+
+    @property
+    def headroom(self) -> int:
+        return self.budget - self.in_use
+
+    @property
+    def in_use(self) -> int:
+        return self.pool.in_use + self.state_pool.in_use
+
+    @property
+    def peak_bytes(self) -> int:
+        return self._peak
+
+    @property
+    def reuse_count(self) -> int:
+        return self.pool.reuse_count + self.state_pool.reuse_count
+
+    def capacity_tokens(self, slot: int) -> int:
+        """Token positions the slot's current block table covers."""
+        if self.block_bytes == 0:
+            return 1 << 62                       # stateful archs: unbounded
+        return len(self.block_tables[slot]) * self.block_size
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def admit(self, slot: int, n_tokens: int) -> None:
+        """Allocate a fresh slot's prompt blocks + state slab."""
+        assert slot not in self.block_tables, f"slot {slot} already live"
+        need = self.bytes_for(n_tokens)
+        if need > self.headroom:
+            raise MemoryError(
+                f"slot {slot}: {need} bytes exceeds block-pool headroom "
+                f"({self.headroom})")
+        self.block_tables[slot] = [self.pool.acquire(self.block_bytes)
+                                   for _ in range(self.blocks_for(n_tokens))]
+        if self.state_bytes:
+            self.state_slabs[slot] = \
+                self.state_pool.acquire(self.state_bytes)
+        self._peak = max(self._peak, self.in_use)
+
+    def grow(self, slot: int, n_tokens: int) -> bool:
+        """Extend the slot's block table to cover ``n_tokens`` positions.
+        Returns False (allocating nothing) when the pool lacks headroom —
+        the engine then preempts and retries."""
+        table = self.block_tables[slot]
+        extra = self.blocks_for(n_tokens) - len(table)
+        if extra <= 0:
+            return True
+        if extra * self.block_bytes > self.headroom:
+            return False
+        table.extend(self.pool.acquire(self.block_bytes)
+                     for _ in range(extra))
+        self._peak = max(self._peak, self.in_use)
+        return True
+
+    def free(self, slot: int) -> None:
+        """Release every block + the state slab the iteration a request
+        finishes (or is preempted) — §3.2 cross-request reuse."""
+        for slab in self.block_tables.pop(slot):
+            self.pool.release(slab)
+        state = self.state_slabs.pop(slot, None)
+        if state is not None:
+            self.state_pool.release(state)
+
+    def live_block_ids(self) -> "dict[int, set]":
+        """slot -> slab-id set (aliasing check for the property tests);
+        ids are namespaced per pool since both pools count from 0."""
+        out = {s: {("b", b.id) for b in t}
+               for s, t in self.block_tables.items()}
+        for s, slab in self.state_slabs.items():
+            out.setdefault(s, set()).add(("s", slab.id))
+        return out

@@ -7,8 +7,39 @@ import jax.numpy as jnp
 
 
 def greedy(logits):
-    """(B, V) -> (B,) int32."""
+    """(B, V) -> (B,) int32, plain fp32 argmax."""
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def greedy_serving(logits):
+    """(B, V) -> (B,) int32, argmax over bfloat16-quantized logits —
+    the serving engines' greedy decode (runtime/stepper.py).
+
+    Serving-grade determinism: XLA CPU matmul results can differ by a
+    few ulps depending on buffer addresses and intra-op scheduling, so a
+    raw fp32 argmax flips whenever the top-2 logits sit within that
+    noise — which breaks the continuous-engine/round-engine
+    bit-identical-streams contract about once per few thousand tokens.
+    Quantizing to bfloat16 first makes selection a step function with
+    ~0.4 % relative quanta: sub-quantum noise cannot change the winner
+    (exact ties resolve to the lowest index), so both engines pick the
+    same token unless the true gap straddles a quantum boundary — a
+    ~1e-5/token event instead of ~1e-2/stream.  Deliberately NOT the
+    default :func:`greedy` / ``sample(temperature=0)`` semantics.
+    """
+    return jnp.argmax(logits.astype(jnp.bfloat16), axis=-1) \
+              .astype(jnp.int32)
+
+
+def select_tokens(logits, active, fallback):
+    """Greedy next-token with slot-validity gating (in-trace).
+
+    logits (B, V), active (B,) bool, fallback (B,) int32 -> (B,) int32.
+    Inactive slot-table rows keep ``fallback`` (their previous token) so
+    the fixed-shape decode dispatch never disturbs idle slots.
+    """
+    return jnp.where(active, greedy_serving(logits),
+                     fallback.astype(jnp.int32))
 
 
 def sample(logits, key, temperature: float = 1.0, top_k: int = 0):

@@ -1,0 +1,139 @@
+"""Pre-traced batched step functions shared by both serving engines.
+
+One :class:`Stepper` owns exactly two jitted callables per batch shape:
+
+* ``decode`` — ONE decode iteration over a whole slot table: every row
+  advances from its own ``cache_len`` with an ``active`` validity mask,
+  greedy sampling fused in-trace, so requests join and leave between
+  iterations without retracing or re-dispatching per request.
+* ``prefill_chunk`` — an in-trace ``lax.scan`` consuming a fixed-width
+  chunk of ``prefill_chunk`` tokens per row.  Per-row ``n_valid`` masks
+  ragged prompt tails (and rows that are not prefilling at all), so every
+  prompt length — full chunks, remainders, idle rows — compiles exactly
+  one trace per batch shape.  The logits at each row's *last* valid step
+  are captured in-carry and argmax'd, yielding the first generated token
+  without materializing per-position logits.
+
+Trace counters are incremented inside the traced Python bodies (which
+run only at trace time), so ``chunk_traces`` / ``decode_traces`` observe
+XLA retraces directly; ``dispatches`` counts calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sampling import greedy_serving, select_tokens
+
+
+def _device(x, dtype):
+    """Host array -> device array, always copying: CPU-backend
+    ``jnp.asarray`` aliases aligned numpy buffers zero-copy, so an engine
+    that mutates its slot-table arrays in place (``slot_len += ...``)
+    would race the still-in-flight async dispatch reading them."""
+    return jnp.array(np.asarray(x), dtype=dtype, copy=True)
+
+
+class Stepper:
+    """Batched, validity-masked decode/prefill dispatches for one model."""
+
+    def __init__(self, api):
+        self.api = api
+        self.cfg = api.cfg
+        self.chunk_traces = 0
+        self.decode_traces = 0
+        self.dispatches = 0
+        self._decode = jax.jit(self._make_decode())
+        self._chunk = jax.jit(self._make_chunk())
+        self._reset = jax.jit(self._make_reset())
+
+    # -- decode -------------------------------------------------------------
+
+    def _make_decode(self):
+        decode = self.api.decode_fn
+
+        def step(params, caches, toks, lens, active):
+            self.decode_traces += 1          # trace-time side effect
+            batch = {"tokens": toks[:, None], "cache_len": lens,
+                     "active": active}
+            logits, caches = decode(params, caches, batch)
+            return select_tokens(logits, active, toks), caches
+
+        return step
+
+    def decode(self, params, caches, toks, lens, active):
+        """toks/lens/active (B,) -> (next_tok (B,), new caches)."""
+        self.dispatches += 1
+        return self._decode(params, caches, _device(toks, jnp.int32),
+                            _device(lens, jnp.int32),
+                            _device(active, bool))
+
+    # -- chunked prefill ----------------------------------------------------
+
+    def _make_chunk(self):
+        decode = self.api.decode_fn
+
+        def run_chunk(params, caches, toks, lens, n_valid):
+            self.chunk_traces += 1           # trace-time side effect
+            B, C = toks.shape
+
+            def step(carry, x):
+                caches, lens, first = carry
+                tok_col, i = x
+                active = i < n_valid
+                batch = {"tokens": tok_col[:, None], "cache_len": lens,
+                         "active": active}
+                logits, caches = decode(params, caches, batch)
+                first = jnp.where(i == n_valid - 1,
+                                  greedy_serving(logits), first)
+                lens = lens + active.astype(jnp.int32)
+                return (caches, lens, first), None
+
+            first0 = jnp.zeros((B,), jnp.int32)
+            (caches, lens, first), _ = jax.lax.scan(
+                step, (caches, lens, first0),
+                (jnp.swapaxes(toks, 0, 1), jnp.arange(C, dtype=jnp.int32)))
+            return caches, lens, first
+
+        return run_chunk
+
+    def prefill_chunk(self, params, caches, toks, lens, n_valid):
+        """toks (B, C); lens/n_valid (B,).  Consumes ``n_valid[b]`` prompt
+        tokens for row b starting at its ``lens[b]`` cache position.
+        Returns (caches, new lens, first-token per row — meaningful only
+        for rows whose prompt completed inside this chunk)."""
+        self.dispatches += 1
+        return self._chunk(params, caches, _device(toks, jnp.int32),
+                           _device(lens, jnp.int32),
+                           _device(n_valid, jnp.int32))
+
+    # -- slot reset ---------------------------------------------------------
+
+    def _make_reset(self):
+        def reset(caches, fresh):
+            def clear(cache, batch_axis):
+                out = {}
+                for name, a in cache.items():
+                    if name == "pos":        # shared slot index, rowless
+                        out[name] = a
+                        continue
+                    shape = [1] * a.ndim
+                    shape[batch_axis] = fresh.shape[0]
+                    out[name] = jnp.where(fresh.reshape(shape),
+                                          jnp.zeros_like(a), a)
+                return out
+
+            return {"prefix": [clear(c, 0) for c in caches["prefix"]],
+                    "period": [clear(c, 1) for c in caches["period"]]}
+
+        return reset
+
+    def reset_rows(self, caches, fresh):
+        """Zero every cache entry of rows with ``fresh[b]`` True — a new
+        tenant must see exactly the state `init_caches` would give it
+        (SSM state / conv windows are carried outside the masked KV
+        region, so stale tenants would otherwise leak through)."""
+        self.dispatches += 1
+        return self._reset(caches, _device(fresh, bool))

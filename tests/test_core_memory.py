@@ -151,6 +151,62 @@ def test_plan_arena_high_water_matches_known_values():
             assert p.size >= peak_memory_linear_scan(lts)
 
 
+class _LinearScanAllocator:
+    """Reference best-fit: the pre-index O(n) scan over the offset-sorted
+    free list (what BumpAllocator.allocate did before the size-ordered
+    index).  Used to pin the index's choices bit-for-bit."""
+
+    def __init__(self):
+        self.inner = BumpAllocator()
+
+    def allocate(self, size):
+        from repro.core.arena import _align
+        import bisect
+        a = self.inner
+        size = _align(max(size, 1))
+        best = -1
+        for i, (off, sz) in enumerate(a.free_list):
+            if sz >= size and (best < 0 or sz < a.free_list[best][1]):
+                best = i
+        if best >= 0:
+            off, sz = a.free_list.pop(best)
+            a._drop_size(sz, off)
+            if sz > size:
+                bisect.insort(a.free_list, (off + size, sz - size))
+                bisect.insort(a._by_size, (sz - size, off + size))
+            a.reuse_hits += 1
+            return off
+        off = a.bump
+        a.bump += size
+        return off
+
+    def free(self, off, size):
+        self.inner.free(off, size)
+
+
+def test_bump_allocator_size_index_matches_linear_best_fit():
+    """O(log n) size-ordered best-fit must pick the exact offsets the
+    linear scan picked (same size, lowest offset on ties) — identical
+    offsets, high_water, and reuse_hits over a randomized trace."""
+    rng = np.random.default_rng(7)
+    fast, ref = BumpAllocator(), _LinearScanAllocator()
+    live: list = []
+    for _ in range(400):
+        if live and rng.random() < 0.5:
+            off, sz = live.pop(rng.integers(len(live)))
+            fast.free(off, sz)
+            ref.free(off, sz)
+        else:
+            sz = int(rng.integers(1, 700))
+            off = fast.allocate(sz)
+            assert off == ref.allocate(sz)
+            live.append((off, sz))
+    assert fast.high_water == ref.inner.high_water
+    assert fast.reuse_hits == ref.inner.reuse_hits
+    assert fast.free_list == ref.inner.free_list
+    assert fast._by_size == ref.inner._by_size
+
+
 def test_slab_pool_best_fit_is_smallest_adequate():
     pool = SlabPool()
     big = pool.acquire(4096)

@@ -120,6 +120,30 @@ def test_decode_attention_sweep(dtype, B, H, K, T, D, bk, window,
                                np.asarray(ref, np.float32), **TOL[dtype])
 
 
+def test_decode_attention_per_row_lengths():
+    """Vector cache_len (B,): every batch row masks at its own length —
+    the continuous-batching slot-table contract."""
+    B, H, K, T, D = 4, 4, 2, 64, 16
+    q = _rand(jax.random.key(0), (B, H, D), "float32")
+    k = _rand(jax.random.key(1), (B, K, T, D), "float32")
+    v = _rand(jax.random.key(2), (B, K, T, D), "float32")
+    pos = jnp.arange(T, dtype=jnp.int32)              # block-cache layout
+    lens = jnp.asarray([0, 7, 33, 63], jnp.int32)
+    for window in (0, 16):
+        got = decode_attention_op(q, k, v, pos, lens, window=window,
+                                  block_k=16, interpret=True)
+        ref = decode_attention_ref(q, k, v, pos, lens, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+        # row b must equal a scalar-cache_len call at its own length
+        for b in range(B):
+            one = decode_attention_op(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                      pos, int(lens[b]), window=window,
+                                      block_k=16, interpret=True)
+            np.testing.assert_array_equal(np.asarray(got[b]),
+                                          np.asarray(one[0]))
+
+
 def test_decode_attention_ring_positions():
     """Ring-buffer slot order (positions permuted) must not matter."""
     B, H, K, T, D = 1, 2, 2, 32, 16

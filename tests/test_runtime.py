@@ -72,36 +72,11 @@ def test_engine_completes_all_requests_within_budget():
     assert engine.kv.peak_bytes <= engine.kv.budget
 
 
-def test_engine_greedy_decode_is_deterministic():
-    cfg = get_config("stablelm-3b").reduced()
-    api = build_model(cfg)
-    params = api.init(jax.random.key(0))
-
-    def run_once():
-        eng = ServingEngine(api, params, hbm_budget_bytes=1 << 28)
-        eng.submit(Request(0, np.arange(6, dtype=np.int32),
-                           max_new_tokens=5))
-        return eng.run()[0].tokens
-
-    assert run_once() == run_once()
-
-
-def test_chunked_prefill_matches_token_by_token():
-    """Prefill chunk width must not change decoded tokens: chunk=1 is the
-    old token-by-token loop, chunk=8 covers full + ragged-remainder chunks
-    (prompt length 6)."""
-    cfg = get_config("stablelm-3b").reduced()
-    api = build_model(cfg)
-    params = api.init(jax.random.key(0))
-
-    def run_once(chunk):
-        eng = ServingEngine(api, params, hbm_budget_bytes=1 << 28,
-                            prefill_chunk=chunk)
-        eng.submit(Request(0, np.arange(6, dtype=np.int32),
-                           max_new_tokens=5))
-        return eng.run()[0].tokens
-
-    assert run_once(1) == run_once(8) == run_once(4)
+# NOTE: greedy-determinism and chunk-width stream-invariance assertions
+# live in tests/test_serving.py (test_greedy_decode_deterministic_and_
+# chunk_invariant): token-stream comparisons require synchronous CPU
+# dispatch, which is a backend-init-time option and therefore runs in
+# the dedicated child process (tests/serving_identity_child.py).
 
 
 # -- optimizer / checkpoint / data -------------------------------------------
