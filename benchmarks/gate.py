@@ -1,0 +1,147 @@
+"""CI benchmark gate: diff a fresh BENCH_serving.json against the
+committed baseline and FAIL on regression.
+
+Metrics and how they are compared:
+
+* ``dispatches_per_token`` (round + continuous engines, and the
+  shared-prefix workload) — fully deterministic given the workload, so
+  gated directly: fresh may not exceed baseline by more than
+  ``--threshold`` (default 15 %).
+* throughput — raw tok/s is machine-dependent (the committed baseline
+  and the CI runner are different hardware), so the gate uses the
+  run-internal **speedup ratio** (continuous tok/s / round tok/s, both
+  measured on the same machine in the same process): fresh speedup may
+  not fall more than ``--speedup-threshold`` below the baseline's.
+  This threshold is wider (default 35 %) than the deterministic one:
+  the quick workload's wall times are O(50 ms), so even best-of-N
+  ratios carry ~±25 % scheduler noise on shared runners — 35 % still
+  catches the real failure mode (the continuous engine losing its
+  batching advantage) without flaking the build on timer jitter.
+* prefix sharing must stay engaged (``shared_prefix.sharing_engaged``)
+  and the shared-prefix workload's prompt-block allocations may not
+  exceed baseline by more than the threshold.
+* stream identity (``identical_streams``) must not regress from true
+  to false.
+
+Exit status 0 = within budget, 1 = regression (each violation printed).
+
+    python benchmarks/gate.py --baseline BENCH_serving.json \
+                              --fresh BENCH_fresh.json [--threshold 0.15]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _get(report: dict, path: str):
+    cur = report
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def gate(baseline: dict, fresh: dict, threshold: float,
+         speedup_threshold: "float | None" = None) -> "list[str]":
+    """Returns the list of violations (empty = gate passes)."""
+    if speedup_threshold is None:
+        speedup_threshold = max(threshold, 0.35)
+    bad: "list[str]" = []
+
+    # dispatches/token and block counts are workload-dependent: a
+    # baseline regenerated with a different workload (e.g. full vs
+    # --quick) must fail loudly, not produce a bogus % comparison
+    bw, fw = _get(baseline, "workload"), _get(fresh, "workload")
+    if bw != fw:
+        bad.append(f"workload mismatch: baseline {bw!r} vs fresh {fw!r} "
+                   f"— regenerate the baseline with the same arguments")
+        return bad
+
+    def worse_if_higher(path, label):
+        b, f = _get(baseline, path), _get(fresh, path)
+        if b is None or f is None:
+            bad.append(f"{label}: metric missing "
+                       f"(baseline={b!r}, fresh={f!r})")
+            return
+        if b <= 0:
+            return
+        if f > b * (1.0 + threshold):
+            bad.append(f"{label}: {f} vs baseline {b} "
+                       f"(> +{threshold:.0%})")
+
+    def worse_if_lower(path, label, thr=None):
+        thr = threshold if thr is None else thr
+        b, f = _get(baseline, path), _get(fresh, path)
+        if b is None or f is None:
+            bad.append(f"{label}: metric missing "
+                       f"(baseline={b!r}, fresh={f!r})")
+            return
+        if b <= 0:
+            return
+        if f < b * (1.0 - thr):
+            bad.append(f"{label}: {f} vs baseline {b} "
+                       f"(< -{thr:.0%})")
+
+    worse_if_higher("continuous.dispatches_per_token",
+                    "continuous dispatches/token")
+    worse_if_higher("round.dispatches_per_token",
+                    "round dispatches/token")
+    worse_if_higher("shared_prefix.dispatches_per_token",
+                    "shared-prefix dispatches/token")
+    # tok/s, normalized within each run (see module docstring)
+    worse_if_lower("speedup_tok_per_s",
+                   "continuous/round tok/s speedup",
+                   thr=speedup_threshold)
+    worse_if_higher("shared_prefix.prompt_blocks_acquired",
+                    "shared-prefix prompt blocks allocated")
+
+    if _get(baseline, "identical_streams") and \
+            not _get(fresh, "identical_streams"):
+        bad.append("identical_streams regressed true -> false")
+    if _get(baseline, "shared_prefix.sharing_engaged") and \
+            not _get(fresh, "shared_prefix.sharing_engaged"):
+        bad.append("prefix sharing no longer engaged")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_serving.json",
+                    help="committed baseline report")
+    ap.add_argument("--fresh", required=True,
+                    help="report produced by this build")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="allowed relative regression (default 0.15)")
+    ap.add_argument("--speedup-threshold", type=float, default=None,
+                    help="allowed regression of the (noisy, timing-"
+                         "based) speedup ratio; default "
+                         "max(threshold, 0.35)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    violations = gate(baseline, fresh, args.threshold,
+                      args.speedup_threshold)
+    if violations:
+        print("bench-gate: FAIL")
+        for v in violations:
+            print(f"  - {v}")
+        return 1
+    print(f"bench-gate: OK (threshold {args.threshold:.0%}; "
+          f"continuous {_get(fresh, 'continuous.dispatches_per_token')} "
+          f"disp/tok vs baseline "
+          f"{_get(baseline, 'continuous.dispatches_per_token')}, "
+          f"speedup x{_get(fresh, 'speedup_tok_per_s')} vs "
+          f"x{_get(baseline, 'speedup_tok_per_s')})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""jit'd wrappers for the paged_attention kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .paged_attention import paged_append, paged_decode_attention
+from .ref import (gather_kv_ref, paged_append_ref,
+                  paged_decode_attention_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention_op(q, k_pool, v_pool, block_tables, cache_len,
+                              window=0, interpret=False):
+    return paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                  cache_len, window=window,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=(0, 1))
+def paged_append_op(k_pool, v_pool, k_new, v_new, block_tables, lens,
+                    n_valid, interpret=False):
+    return paged_append(k_pool, v_pool, k_new, v_new, block_tables,
+                        lens, n_valid, interpret=interpret)
+
+
+__all__ = ["paged_decode_attention_op", "paged_decode_attention_ref",
+           "paged_append_op", "paged_append_ref", "gather_kv_ref"]

@@ -1,0 +1,62 @@
+"""Pure-NumPy oracles for the paged_attention kernels."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def gather_kv_ref(pool, block_tables):
+    """pools (nb+1, bs, K, D) via tables (B, bpr) -> dense (B, T, K, D)
+    with T = bpr * bs (logical position t at row t // bs, slot t % bs)."""
+    pool = np.asarray(pool)
+    tables = np.asarray(block_tables)
+    B, bpr = tables.shape
+    _, bs, K, D = pool.shape
+    return pool[tables].reshape(B, bpr * bs, K, D)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
+                               cache_len, window: int = 0):
+    """q (B,H,D) x pools (nb+1,bs,K,D) via tables (B,bpr) -> (B,H,D)."""
+    q = np.asarray(q)
+    B, H, D = q.shape
+    K = k_pool.shape[2]
+    k = gather_kv_ref(k_pool, block_tables)          # (B, T, K, D)
+    v = gather_kv_ref(v_pool, block_tables)
+    T = k.shape[1]
+    kr = np.repeat(k, H // K, axis=2)                # (B, T, H, D)
+    vr = np.repeat(v, H // K, axis=2)
+    s = np.einsum("bhd,bthd->bht", q.astype(np.float32),
+                  kr.astype(np.float32)) / np.sqrt(D)
+    lens = np.broadcast_to(np.asarray(cache_len, np.int32).reshape(-1),
+                           (B,))
+    t = np.arange(T, dtype=np.int32)[None, :]
+    valid = t <= lens[:, None]
+    if window > 0:
+        valid &= t > lens[:, None] - window
+    s = np.where(valid[:, None, :], s, -1e30)
+    s = s - s.max(-1, keepdims=True)
+    p = np.exp(s)
+    p /= p.sum(-1, keepdims=True)
+    out = np.einsum("bht,bthd->bhd", p, vr.astype(np.float32))
+    return out.astype(q.dtype)
+
+
+def paged_append_ref(k_pool, v_pool, k_new, v_new, block_tables, lens,
+                     n_valid):
+    """NumPy oracle of :func:`paged_append` (out-of-place copies)."""
+    k_pool = np.array(k_pool, copy=True)
+    v_pool = np.array(v_pool, copy=True)
+    tables = np.asarray(block_tables)
+    k_new, v_new = np.asarray(k_new), np.asarray(v_new)
+    B, C = k_new.shape[:2]
+    bs = k_pool.shape[1]
+    lens = np.broadcast_to(np.asarray(lens, np.int32).reshape(-1), (B,))
+    nv = np.broadcast_to(np.asarray(n_valid, np.int32).reshape(-1), (B,))
+    for b in range(B):
+        for c in range(int(nv[b])):
+            p = int(lens[b]) + c
+            bid = int(tables[b, p // bs])
+            k_pool[bid, p % bs] = k_new[b, c].astype(k_pool.dtype)
+            v_pool[bid, p % bs] = v_new[b, c].astype(v_pool.dtype)
+    return k_pool, v_pool

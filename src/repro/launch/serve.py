@@ -5,7 +5,9 @@
         [--engine round|continuous]
 
 ``--engine continuous`` serves through the iteration-level slot-table
-engine with the slab-backed block KV cache (decoder-only models).
+engine on the physically paged block KV cache with cross-request
+prefix sharing (decoder-only models); ``--dense-cache`` falls back to
+the dense per-slot cache baseline.
 """
 
 from __future__ import annotations
@@ -24,7 +26,8 @@ from repro.runtime.engine import (ContinuousEngine, Request,
 
 def serve(arch: str, n_requests: int = 8, max_new: int = 16,
           budget_mb: int = 256, prompt_len: int = 12, seed: int = 0,
-          max_batch: int = 4, engine_mode: str = "round"):
+          max_batch: int = 4, engine_mode: str = "round",
+          paged: bool = True):
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.key(seed))
@@ -32,7 +35,8 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
         engine = ContinuousEngine(api, params,
                                   hbm_budget_bytes=budget_mb << 20,
                                   max_batch=max_batch,
-                                  max_context=prompt_len + max_new)
+                                  max_context=prompt_len + max_new,
+                                  paged=paged)
     else:
         engine = ServingEngine(api, params,
                                hbm_budget_bytes=budget_mb << 20,
@@ -73,9 +77,12 @@ def main():
     ap.add_argument("--budget-mb", type=int, default=256)
     ap.add_argument("--engine", choices=("round", "continuous"),
                     default="round")
+    ap.add_argument("--dense-cache", action="store_true",
+                    help="dense per-slot KV arrays instead of the "
+                         "physically paged block pool")
     args = ap.parse_args()
     serve(args.arch, args.requests, args.max_new, args.budget_mb,
-          engine_mode=args.engine)
+          engine_mode=args.engine, paged=not args.dense_cache)
 
 
 if __name__ == "__main__":

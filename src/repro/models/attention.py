@@ -247,8 +247,27 @@ def fill_kv_cache(cache, k, v, start: int = 0):
     return out
 
 
+def init_paged_kv_cache(cfg, num_blocks: int, block_size: int, dtype):
+    """Physically paged KV cache: ONE pool of fixed-size blocks per layer.
+
+    Layout ``(num_blocks + 1, block_size, K, D)`` — the trailing row is a
+    *scratch block*: block-table entries of unallocated logical blocks
+    point at it (gathers read zeros, fully masked) and gated-off writes
+    land in it, so the traced step needs no out-of-bounds handling.
+    Block ids are handed out by :class:`repro.runtime.kv_cache
+    .BlockKVCache` (slab ids double as physical row indices); the same
+    ``(B, blocks_per_seq)`` block table indexes every layer's pool.
+    """
+    hd = cfg.resolved_head_dim()
+    K = cfg.num_kv_heads
+    shape = (num_blocks + 1, block_size, K, hd)
+    return {"k_pool": jnp.zeros(shape, dtype),
+            "v_pool": jnp.zeros(shape, dtype)}
+
+
 def decode_step_attention(params, cfg, x, cache, cache_len,
-                          positions3=None, window: int = 0, active=None):
+                          positions3=None, window: int = 0, active=None,
+                          block_tables=None):
     """One-token decode: x (B, 1, d) against cache k/v (B, slots, K, D).
 
     ``cache_len`` is the number of tokens already generated/prefilled;
@@ -270,8 +289,16 @@ def decode_step_attention(params, cfg, x, cache, cache_len,
     Returns ``(out (B,1,d), new_cache)``.
     """
     B = x.shape[0]
-    slots = cache["k"].shape[1]
     cache_len = jnp.asarray(cache_len, jnp.int32)
+    if "k_pool" in cache:
+        if cache_len.ndim != 1 or block_tables is None:
+            raise ValueError(
+                "paged caches require vector cache_len (B,) and a "
+                "(B, blocks_per_seq) block table")
+        return _decode_step_attention_paged(
+            params, cfg, x, cache, cache_len, block_tables, positions3,
+            window, active)
+    slots = cache["k"].shape[1]
     if cache_len.ndim == 1:
         return _decode_step_attention_vec(params, cfg, x, cache, cache_len,
                                           positions3, window, active)
@@ -338,3 +365,58 @@ def _decode_step_attention_vec(params, cfg, x, cache, cache_len,
     out = jnp.einsum("bsf,fd->bsd", ctx.reshape(B, 1, -1),
                      params["wo"].astype(x.dtype))
     return out, {"k": k, "v": v, "pos": cache["pos"]}
+
+
+def _decode_step_attention_paged(params, cfg, x, cache, cache_len,
+                                 block_tables, positions3, window, active):
+    """Vector decode step over a physically paged KV pool.
+
+    ``cache`` holds one block pool per layer (``k_pool``/``v_pool``,
+    shape ``(nb + 1, bs, K, D)`` — last row is the scratch block);
+    ``block_tables`` (B, blocks_per_seq) int32 maps each row's logical
+    block index to a physical pool row.  The new token is scattered into
+    the physical block covering position ``cache_len[b]`` (gated-off
+    rows write the scratch block instead), then K/V are gathered through
+    the table and attended exactly like the dense vector path — the
+    masked-softmax structure is identical, so greedy streams stay
+    bit-identical to the dense cache (garbage in unwritten/scratch
+    positions is masked to an exact 0 contribution).
+
+    The engine guarantees a written block is never shared (prefix-shared
+    blocks are full, immutable and live strictly below every row's write
+    position — see BlockKVCache.check_write).
+    """
+    B = x.shape[0]
+    pool_k, pool_v = cache["k_pool"], cache["v_pool"]
+    nb_total, bs = pool_k.shape[0], pool_k.shape[1]
+    scratch = nb_total - 1
+    bps = block_tables.shape[1]
+    T = bps * bs
+    positions = cache_len[:, None]                        # (B, 1)
+    if positions3 is None and cfg.mrope_sections:
+        positions3 = jnp.broadcast_to(positions, (3, B, 1))
+    q, k_new, v_new = qkv_project(params, cfg, x, positions, positions3)
+
+    # scatter the new token into its physical block
+    lblk = jnp.clip(cache_len // bs, 0, bps - 1)          # logical block
+    bids = jnp.take_along_axis(block_tables, lblk[:, None], 1)[:, 0]
+    offs = cache_len % bs
+    if active is not None:
+        bids = jnp.where(active, bids, scratch)
+    pool_k = pool_k.at[bids, offs].set(k_new[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[bids, offs].set(v_new[:, 0].astype(pool_v.dtype))
+
+    # gather the row's cache view through its block table
+    k = pool_k[block_tables].reshape(B, T, *pool_k.shape[2:])
+    v = pool_v[block_tables].reshape(B, T, *pool_v.shape[2:])
+
+    t = jnp.arange(T, dtype=jnp.int32)[None, :]           # (1, T)
+    valid = t <= positions
+    w = window or cfg.sliding_window
+    if w > 0:
+        valid &= t > positions - w
+    mask = valid[:, None, None, None, :]                  # (B,1,1,S=1,T)
+    ctx = attend(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    out = jnp.einsum("bsf,fd->bsd", ctx.reshape(B, 1, -1),
+                     params["wo"].astype(x.dtype))
+    return out, {"k_pool": pool_k, "v_pool": pool_v}

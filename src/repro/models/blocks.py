@@ -116,13 +116,27 @@ def init_block_cache(cfg, kind, batch, max_len, dtype, ring=False):
     return init_mamba_cache(cfg, batch, dtype)
 
 
+def init_paged_block_cache(cfg, kind, batch, num_blocks, block_size,
+                           dtype):
+    """Paged variant of init_block_cache: attention layers get a
+    physical block pool (no batch axis — rows are shared across the slot
+    table via block tables); SSM state stays per-row."""
+    from .attention import init_paged_kv_cache
+    mixer, _ = kind
+    if mixer == "attn":
+        return init_paged_kv_cache(cfg, num_blocks, block_size, dtype)
+    return init_mamba_cache(cfg, batch, dtype)
+
+
 def decode_block(params, cfg, x, cache, kind, cache_len,
                  positions3=None, moe_impl="ragged", mesh=None,
-                 active=None):
+                 active=None, block_tables=None):
     """Single-token decode block.  x: (B, 1, d).
 
     ``active`` (B,) bool gates per-row cache updates (continuous
     batching: inactive slot-table rows must not mutate their caches).
+    ``block_tables`` (B, blocks_per_seq) routes paged attention caches
+    (see attention.init_paged_kv_cache); ignored by dense caches.
     """
     mixer, _ = kind
     norm = make_norm(cfg.norm_type)
@@ -130,7 +144,8 @@ def decode_block(params, cfg, x, cache, kind, cache_len,
     if mixer == "attn":
         y, cache = decode_step_attention(params["attn"], cfg, h, cache,
                                          cache_len, positions3,
-                                         active=active)
+                                         active=active,
+                                         block_tables=block_tables)
     else:
         y, new_cache = mamba_decode_step(params["mamba"], cfg, h, cache)
         if active is not None:

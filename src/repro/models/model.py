@@ -47,9 +47,15 @@ class ModelAPI:
     init_caches: Callable          # (batch, max_len, dtype, ring) -> caches
     input_specs: Callable          # (InputShape) -> dict[str, ShapeDtypeStruct]
     batch_pspecs: Callable         # (InputShape) -> dict[str, PartitionSpec]
+    # (batch, num_blocks, block_size, dtype) -> physically paged caches;
+    # None for families without a paged decode path (encoder-decoder)
+    init_paged_caches: "Callable | None" = None
 
     def decode_supported(self) -> bool:
         return True
+
+    def paged_supported(self) -> bool:
+        return self.init_paged_caches is not None
 
 
 def _moe_impl_for(cfg, distributed: bool):
@@ -95,10 +101,15 @@ def _build_decoder_lm(cfg, distributed, mesh, long_context):
         return transformer.decode_lm(
             params, cfg, caches, batch["tokens"], batch["cache_len"],
             batch.get("positions3"), moe_impl=moe_impl, mesh=mesh,
-            active=batch.get("active"))
+            active=batch.get("active"),
+            block_tables=batch.get("block_tables"))
 
     def init_caches(batch, max_len, dtype, ring=False):
         return transformer.init_caches(cfg, batch, max_len, dtype, ring)
+
+    def init_paged_caches(batch, num_blocks, block_size, dtype):
+        return transformer.init_paged_caches(cfg, batch, num_blocks,
+                                             block_size, dtype)
 
     def input_specs(shape):
         B, S = shape.global_batch, shape.seq_len
@@ -150,7 +161,8 @@ def _build_decoder_lm(cfg, distributed, mesh, long_context):
         return sp
 
     return ModelAPI(cfg, init, loss_fn, prefill_fn, decode_fn,
-                    init_caches, input_specs, batch_pspecs)
+                    init_caches, input_specs, batch_pspecs,
+                    init_paged_caches=init_paged_caches)
 
 
 # --------------------------------------------------------------------------

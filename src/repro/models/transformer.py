@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from . import runtime_flags
 from .blocks import (apply_block, block_pattern, decode_block,
-                     init_block, init_block_cache, split_pattern)
+                     init_block, init_block_cache, init_paged_block_cache,
+                     split_pattern)
 from .common import embed_init, init_norm, make_norm
 from .sharding import maybe_shard, shard_batch_seq, DP_AXES
 from .vocab import logits_last_token, lm_logits
@@ -140,6 +141,27 @@ def init_caches(cfg, batch, max_len, dtype, ring=False):
     return caches
 
 
+def init_paged_caches(cfg, batch, num_blocks, block_size, dtype):
+    """Paged-cache counterpart of :func:`init_caches`: every attention
+    layer gets ONE physical ``(num_blocks + 1, block_size, K, D)`` block
+    pool (shared across slot-table rows via block tables); SSM state
+    keeps its per-row layout."""
+    pattern, prefix_len, period, n_rep = structure(cfg)
+    caches = {"prefix": [init_paged_block_cache(cfg, pattern[i], batch,
+                                                num_blocks, block_size,
+                                                dtype)
+                         for i in range(prefix_len)]}
+    stacked = []
+    for j in range(period):
+        kind = pattern[prefix_len + j]
+        c = init_paged_block_cache(cfg, kind, batch, num_blocks,
+                                   block_size, dtype)
+        stacked.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape), c))
+    caches["period"] = stacked
+    return caches
+
+
 def prefill_lm(params, cfg, tokens, frontend_embeds=None, positions3=None,
                moe_impl="ragged", mesh=None, window=None):
     """Prefill: full forward returning last-token logits only (the full
@@ -152,12 +174,16 @@ def prefill_lm(params, cfg, tokens, frontend_embeds=None, positions3=None,
 
 
 def decode_lm(params, cfg, caches, tokens, cache_len, positions3=None,
-              moe_impl="ragged", mesh=None, active=None):
+              moe_impl="ragged", mesh=None, active=None,
+              block_tables=None):
     """One decode step.  tokens: (B, 1) -> (logits (B, V), new caches).
 
     ``cache_len`` may be a scalar (all rows at the same position) or a
     (B,) vector (continuous batching: per-slot positions); ``active``
     (B,) bool gates cache writes per row — see models/attention.py.
+    ``block_tables`` (B, blocks_per_seq) must be passed when ``caches``
+    were built by :func:`init_paged_caches` (one table routes every
+    layer's pool).
     """
     pattern, prefix_len, period, n_rep = structure(cfg)
     x = params["embed"].astype(cfg.dtype)[tokens]      # (B, 1, d)
@@ -166,7 +192,8 @@ def decode_lm(params, cfg, caches, tokens, cache_len, positions3=None,
     for i in range(prefix_len):
         x, c = decode_block(params["prefix"][i], cfg, x,
                             caches["prefix"][i], pattern[i], cache_len,
-                            positions3, moe_impl, mesh, active)
+                            positions3, moe_impl, mesh, active,
+                            block_tables)
         new_prefix.append(c)
 
     new_period = caches["period"]
@@ -179,7 +206,8 @@ def decode_lm(params, cfg, caches, tokens, cache_len, positions3=None,
             for j in range(period):
                 x, c = decode_block(layer_params[j], cfg, x,
                                     layer_caches[j], kinds[j], cache_len,
-                                    positions3, moe_impl, mesh, active)
+                                    positions3, moe_impl, mesh, active,
+                                    block_tables)
                 new_caches.append(c)
             return x, tuple(new_caches)
 

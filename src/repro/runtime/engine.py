@@ -286,19 +286,33 @@ class ContinuousEngine:
     prefilling slot by up to ``prefill_chunk`` prompt tokens, (3) block
     growth (with demote-only preemption of the youngest request when the
     pool is exhausted), (4) ONE decode dispatch advances every decoding
-    slot.  Caches are allocated once at ``(max_batch, max_context)``;
-    the two step functions trace exactly once for the whole run.
+    slot.  Caches are allocated once; the step functions trace exactly
+    once for the whole run.
+
+    ``paged=True`` (default) stores KV in ONE physical block pool per
+    layer — ``BlockKVCache`` slab ids index the pool rows, and the
+    engine ships a ``(max_batch, blocks_per_seq)`` block table with
+    every dispatch, so block reuse reaches the memory the kernels read
+    (not just the byte accounting).  ``prefix_sharing=True`` maps
+    identical prompt prefixes of concurrently live requests onto the
+    same physical blocks (content-hashed full blocks, refcounted,
+    immutable): the shared tokens are neither re-prefilled nor
+    re-allocated.  ``paged=False`` keeps the dense per-slot arrays —
+    the bit-identical baseline the paged path is validated against.
     """
 
     def __init__(self, api, params, hbm_budget_bytes: int,
                  max_batch: int = 8, margin: float = 0.4,
                  prefill_chunk: int = 16, block_size: int = 16,
                  max_context: int = 64,
-                 stepper: "Stepper | None" = None):
+                 stepper: "Stepper | None" = None,
+                 paged: bool = True, prefix_sharing: bool = True):
         if api.cfg.is_encoder_decoder:
             raise ValueError("ContinuousEngine serves decoder-only "
                              "models (encoder-decoder needs an encoder "
                              "pass the slot table does not schedule)")
+        if paged and api.init_paged_caches is None:
+            raise ValueError("model family has no paged decode path")
         self.api = api
         self.cfg = api.cfg
         self.params = params
@@ -312,8 +326,33 @@ class ContinuousEngine:
             raise ValueError("shared stepper built for a different model")
         self.stepper = stepper if stepper is not None else Stepper(api)
         self.dispatch_count = 0
-        self.caches = api.init_caches(max_batch, max_context,
-                                      jnp.dtype(self.cfg.dtype))
+        self.paged = paged
+        # sharing skips recompute of the shared tokens, which is only
+        # sound when the WHOLE per-token state lives in the shared KV
+        # blocks — any SSM/conv layer carries per-row state the skipped
+        # tokens would never reach, so hybrid archs keep sharing off
+        self.prefix_sharing = (paged and prefix_sharing
+                               and self.kv.block_bytes > 0
+                               and self.kv.state_bytes == 0)
+        if paged:
+            # physical pool rows: every table entry holding a distinct
+            # block bounds the ids BlockKVCache can ever issue, so the
+            # pool shape depends only on (max_batch, max_context,
+            # block_size) — engines differing just in budget share one
+            # compiled trace
+            self.blocks_per_seq = max(1, self.kv.blocks_for(max_context))
+            cap = max_batch * self.blocks_per_seq
+            self.num_blocks = cap
+            self.scratch_block = cap        # pool row cap = scratch
+            self.tables = np.full((max_batch, self.blocks_per_seq),
+                                  self.scratch_block, np.int32)
+            self.caches = api.init_paged_caches(
+                max_batch, self.num_blocks, block_size,
+                jnp.dtype(self.cfg.dtype))
+        else:
+            self.tables = None
+            self.caches = api.init_caches(max_batch, max_context,
+                                          jnp.dtype(self.cfg.dtype))
 
         self.slots: "list[_Seq | None]" = [None] * max_batch
         self.slot_len = np.zeros(max_batch, np.int32)
@@ -408,15 +447,31 @@ class ContinuousEngine:
 
     def _place(self, slot: int, seq: "_Seq", fresh: "np.ndarray") -> None:
         prompt = seq.pending_prompt()
-        self.kv.admit(slot, len(prompt))
+        matched = self.kv.admit(
+            slot, len(prompt),
+            tokens=prompt if self.prefix_sharing else None)
         self.slots[slot] = seq
         self._slot_prompt[slot] = prompt
         self.slot_phase[slot] = PREFILL
-        self.slot_len[slot] = 0
-        self.slot_off[slot] = 0
+        # a shared prefix is already IN the cache (written by the
+        # request that published it, bit-identically — same tokens, same
+        # positions, same executable): prefill resumes after it
+        self.slot_len[slot] = matched
+        self.slot_off[slot] = matched
         self.slot_seq[slot] = self._admit_counter
         self._admit_counter += 1
+        self._refresh_table(slot)
         fresh[slot] = True
+
+    def _refresh_table(self, slot: int) -> None:
+        """Mirror the slot's BlockKVCache table into the np block table
+        shipped with every dispatch (unallocated entries -> scratch)."""
+        if not self.paged:
+            return
+        row = self.tables[slot]
+        row[:] = self.scratch_block
+        ids = self.kv.table_ids(slot)
+        row[:len(ids)] = ids
 
     def _prefill(self) -> None:
         """Chunked prefill — dispatched only when the pending prompt
@@ -440,13 +495,22 @@ class ContinuousEngine:
             toks[s, :take] = prompt[self.slot_off[s]:
                                     self.slot_off[s] + take]
             n_valid[s] = take
+            self.kv.check_write(s, int(self.slot_len[s]),
+                                int(self.slot_len[s]) + take)
         self.dispatch_count += 1
         self.caches, _, first = self.stepper.prefill_chunk(
-            self.params, self.caches, toks, self.slot_len, n_valid)
+            self.params, self.caches, toks, self.slot_len, n_valid,
+            block_tables=self.tables)
         self.slot_len += n_valid
         self.slot_off += n_valid
         first_host: "list[np.ndarray]" = []   # read lazily: syncs
         for s in pre:
+            if self.prefix_sharing:
+                # newly completed full prompt blocks become shareable
+                # (the write dispatch is already issued, and same-device
+                # dispatches execute in issue order)
+                self.kv.publish(s, self._slot_prompt[s],
+                                int(self.slot_len[s]))
             if self.slot_off[s] < len(self._slot_prompt[s]):
                 continue                      # more prompt next iteration
             if not first_host:
@@ -495,6 +559,8 @@ class ContinuousEngine:
                 self._preempt(victim)
                 if victim == s:               # the grower IS the youngest
                     break                     # — demote it, not an elder
+            if self.slot_phase[s] == DECODE:  # grew (not demoted)
+                self._refresh_table(s)
 
     def _preempt(self, slot: int) -> None:
         seq = self.slots[slot]
@@ -502,6 +568,8 @@ class ContinuousEngine:
         self.slots[slot] = None
         self._slot_prompt[slot] = None
         self.slot_phase[slot] = FREE
+        if self.paged:
+            self.tables[slot, :] = self.scratch_block
         seq.preempted = True                  # priority re-admission
         self.waiting.appendleft(seq)
         self.preemptions += 1
@@ -522,13 +590,20 @@ class ContinuousEngine:
         toks = self.slot_last.copy()
         for s in np.flatnonzero(prefilling):
             toks[s] = self._slot_prompt[s][self.slot_off[s]]
+        for s in np.flatnonzero(active):
+            self.kv.check_write(int(s), int(self.slot_len[s]),
+                                int(self.slot_len[s]) + 1)
         self.dispatch_count += 1
         nxt, self.caches = self.stepper.decode(
-            self.params, self.caches, toks, self.slot_len, active)
+            self.params, self.caches, toks, self.slot_len, active,
+            block_tables=self.tables)
         nxt_host = np.asarray(nxt)
         self.slot_len += active
         for s in np.flatnonzero(prefilling):
             self.slot_off[s] += 1
+            if self.prefix_sharing:
+                self.kv.publish(int(s), self._slot_prompt[s],
+                                int(self.slot_len[s]))
             if self.slot_off[s] < len(self._slot_prompt[s]):
                 continue
             self._complete_prefill(int(s), lambda s=s: int(nxt_host[s]))
@@ -547,6 +622,8 @@ class ContinuousEngine:
         self.slots[slot] = None
         self._slot_prompt[slot] = None
         self.slot_phase[slot] = FREE
+        if self.paged:
+            self.tables[slot, :] = self.scratch_block
         self.completed[seq.req.id] = Completion(
             seq.req.id, tokens=list(seq.gen),
             ttft_s=seq.ttft_s if seq.ttft_s is not None else 0.0)

@@ -24,7 +24,10 @@ Two granularities are provided:
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
+
+import numpy as np
 
 from repro.core.arena import SlabPool, _align
 
@@ -129,6 +132,27 @@ class BlockKVCache:
     :class:`SlabPool`: since blocks are uniform-size, every block a
     finished (or preempted) request frees is a perfect best-fit for the
     next grower — cross-request reuse shows up as ``pool.reuse_count``.
+
+    **Physical block ids.**  Because KV slabs are uniform-size, a slab's
+    ``id`` doubles as a *physical row index* into the per-layer block
+    pools allocated by ``models.attention.init_paged_kv_cache``: ids are
+    handed out densely from 0 and reused through the pool, so the peak
+    concurrent block count bounds the highest id ever issued.
+    ``table_ids(slot)`` is the slot's physical block table the engine
+    ships to the traced step functions.
+
+    **Prefix sharing.**  ``admit(..., tokens=...)`` content-hashes the
+    prompt's *full* blocks (a chain hash, so equality means an identical
+    prefix from position 0) and maps matching blocks of concurrently
+    live requests to the same physical block — refcounted, immutable,
+    charged against the budget exactly once.  ``publish`` registers a
+    slot's own full prompt blocks once prefill has actually written
+    them; ``free`` drops refs and only returns a block to the pool (and
+    the hash registry) when its last holder leaves.  Shared blocks are
+    copy-on-write-by-construction: a block is only ever shareable once
+    full and is never written again (``check_write`` enforces this, and
+    the sharing cap in ``admit`` keeps every row's first written
+    position past its shared prefix).
     """
 
     def __init__(self, cfg, budget_bytes: int, block_size: int = 16):
@@ -151,6 +175,15 @@ class BlockKVCache:
         self._peak = 0
         self.block_tables: "dict[int, list]" = {}   # slot -> [Slab, ...]
         self.state_slabs: "dict[int, object]" = {}  # slot -> Slab
+        # prefix sharing: refcounts + content-hash registry
+        self._ref: "dict[int, int]" = {}            # slab id -> holders
+        self._registry: "dict[bytes, object]" = {}  # chain hash -> Slab
+        self._slab_hash: "dict[int, bytes]" = {}    # slab id -> chain hash
+        self._published: "dict[int, int]" = {}      # slot -> #blocks hashed
+        self._chain: "dict[int, bytes]" = {}        # slot -> hash at mark
+        self.shared_block_hits = 0    # blocks mapped instead of allocated
+        self.acquired_blocks = 0      # cumulative pool acquisitions
+        self.prompt_blocks_acquired = 0   # admit-time subset (vs growth)
 
     # -- shape inference ----------------------------------------------------
 
@@ -190,20 +223,113 @@ class BlockKVCache:
 
     # -- lifecycle ----------------------------------------------------------
 
-    def admit(self, slot: int, n_tokens: int) -> None:
-        """Allocate a fresh slot's prompt blocks + state slab."""
+    def _chain_step(self, h: bytes, tokens, i: int) -> bytes:
+        """Extend a chain hash by full block ``i`` of ``tokens``: the
+        result commits to every token in blocks 0..i, so equal hashes
+        mean an identical prefix from position 0 (absolute positions —
+        and hence RoPE — included by construction)."""
+        blk = np.ascontiguousarray(
+            tokens[i * self.block_size:(i + 1) * self.block_size],
+            np.int32)
+        return hashlib.sha1(h + blk.tobytes()).digest()
+
+    def _acquire_block(self):
+        slab = self.pool.acquire(self.block_bytes)
+        self._ref[slab.id] = 1
+        self.acquired_blocks += 1
+        return slab
+
+    def admit(self, slot: int, n_tokens: int, tokens=None) -> int:
+        """Allocate a fresh slot's prompt blocks + state slab.
+
+        With ``tokens`` (the pending prompt, length ``n_tokens``) given,
+        full prompt blocks whose chain hash is registered by a live
+        request are *shared* instead of allocated: the slot's table maps
+        them to the existing physical blocks (refcounted) and only the
+        remainder is charged.  Sharing is capped below the block holding
+        the prompt's LAST position — that position must be recomputed to
+        produce the first generated token's logits, and the cap keeps
+        every write this slot will ever issue strictly above its shared
+        prefix (copy-on-write never triggers; check_write enforces).
+
+        Returns the number of prefix tokens already present in the
+        cache (a multiple of ``block_size``; 0 without sharing) — the
+        engine starts prefill *after* them.
+        """
         assert slot not in self.block_tables, f"slot {slot} already live"
-        need = self.bytes_for(n_tokens)
+        shared, chain = [], b"kv0"
+        if tokens is not None and self.block_bytes and n_tokens > 1:
+            assert len(tokens) == n_tokens, (len(tokens), n_tokens)
+            limit = (n_tokens - 1) // self.block_size
+            for i in range(limit):
+                h = self._chain_step(chain, tokens, i)
+                slab = self._registry.get(h)
+                if slab is None:
+                    break
+                shared.append(slab)
+                chain = h
+        fresh = self.blocks_for(n_tokens) - len(shared)
+        need = fresh * self.block_bytes + self.state_bytes
         if need > self.headroom:
             raise MemoryError(
                 f"slot {slot}: {need} bytes exceeds block-pool headroom "
                 f"({self.headroom})")
-        self.block_tables[slot] = [self.pool.acquire(self.block_bytes)
-                                   for _ in range(self.blocks_for(n_tokens))]
+        for slab in shared:
+            self._ref[slab.id] += 1
+            self.shared_block_hits += 1
+        self.block_tables[slot] = shared + [self._acquire_block()
+                                            for _ in range(fresh)]
+        self.prompt_blocks_acquired += fresh
         if self.state_bytes:
             self.state_slabs[slot] = \
                 self.state_pool.acquire(self.state_bytes)
+        self._published[slot] = len(shared)
+        self._chain[slot] = chain          # hash at the published mark
         self._peak = max(self._peak, self.in_use)
+        return len(shared) * self.block_size
+
+    def publish(self, slot: int, tokens, n_filled: int) -> None:
+        """Register the slot's full prompt blocks entirely covered by
+        the first ``n_filled`` *written* cache positions, making them
+        shareable by later admissions.  Blocks already registered (e.g.
+        the slot's own shared prefix) are skipped; blocks holding
+        generated tokens are never registered (``tokens`` is the pending
+        prompt, so the cap is its length)."""
+        if not self.block_bytes:
+            return
+        full = min(int(n_filled), len(tokens)) // self.block_size
+        start = self._published.get(slot, 0)
+        if full <= start:
+            return
+        table = self.block_tables[slot]
+        chain = self._chain.get(slot, b"kv0")   # hash at ``start`` blocks
+        for i in range(start, full):
+            chain = self._chain_step(chain, tokens, i)
+            if chain not in self._registry:
+                slab = table[i]
+                self._registry[chain] = slab
+                self._slab_hash[slab.id] = chain
+        self._published[slot] = full
+        self._chain[slot] = chain
+
+    def check_write(self, slot: int, start: int, stop: int) -> None:
+        """Assert positions ``start..stop-1`` of the slot are writable:
+        every covered block is private (refcount 1) and unregistered.
+        The engine calls this before each dispatch that writes — a
+        violation means the sharing cap or publish watermark broke, and
+        writing through would corrupt another request's cache."""
+        if not self.block_bytes or stop <= start:
+            return
+        table = self.block_tables[slot]
+        for i in range(start // self.block_size,
+                       (stop - 1) // self.block_size + 1):
+            slab = table[i]
+            if self._ref[slab.id] > 1 or slab.id in self._slab_hash:
+                raise RuntimeError(
+                    f"write-through to shared block: slot {slot} "
+                    f"positions [{start}, {stop}) hit block {slab.id} "
+                    f"(ref={self._ref[slab.id]}, "
+                    f"registered={slab.id in self._slab_hash})")
 
     def grow(self, slot: int, n_tokens: int) -> bool:
         """Extend the slot's block table to cover ``n_tokens`` positions.
@@ -215,23 +341,50 @@ class BlockKVCache:
             return True
         if extra * self.block_bytes > self.headroom:
             return False
-        table.extend(self.pool.acquire(self.block_bytes)
-                     for _ in range(extra))
+        table.extend(self._acquire_block() for _ in range(extra))
         self._peak = max(self._peak, self.in_use)
         return True
 
     def free(self, slot: int) -> None:
-        """Release every block + the state slab the iteration a request
-        finishes (or is preempted) — §3.2 cross-request reuse."""
+        """Drop the slot's reference on every block (+ release the state
+        slab) the iteration a request finishes or is preempted.  A block
+        returns to the pool — §3.2 cross-request reuse — only when its
+        LAST holder leaves; its hash registration is dropped at the same
+        moment (sharing engages among concurrently live requests)."""
         for slab in self.block_tables.pop(slot):
-            self.pool.release(slab)
+            self._ref[slab.id] -= 1
+            if self._ref[slab.id] == 0:
+                del self._ref[slab.id]
+                h = self._slab_hash.pop(slab.id, None)
+                if h is not None:
+                    del self._registry[h]
+                self.pool.release(slab)
         state = self.state_slabs.pop(slot, None)
         if state is not None:
             self.state_pool.release(state)
+        self._published.pop(slot, None)
+        self._chain.pop(slot, None)
+
+    def table_ids(self, slot: int) -> "list[int]":
+        """The slot's physical block table (slab ids double as pool row
+        indices — see class docstring)."""
+        return [slab.id for slab in self.block_tables[slot]]
+
+    def refcount(self, block_id: int) -> int:
+        return self._ref.get(block_id, 0)
+
+    @property
+    def physical_kv_blocks(self) -> int:
+        """Distinct physical KV blocks ever created (peak concurrent) —
+        also the minimum pool rows a paged cache needs."""
+        return (self.pool.total_allocated // self.block_bytes
+                if self.block_bytes else 0)
 
     def live_block_ids(self) -> "dict[int, set]":
         """slot -> slab-id set (aliasing check for the property tests);
-        ids are namespaced per pool since both pools count from 0."""
+        ids are namespaced per pool since both pools count from 0.
+        NOTE: prefix-shared blocks alias across slots BY DESIGN — the
+        no-alias invariant only holds for admissions without ``tokens``."""
         out = {s: {("b", b.id) for b in t}
                for s, t in self.block_tables.items()}
         for s, slab in self.state_slabs.items():

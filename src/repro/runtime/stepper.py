@@ -37,46 +37,74 @@ def _device(x, dtype):
 
 
 class Stepper:
-    """Batched, validity-masked decode/prefill dispatches for one model."""
+    """Batched, validity-masked decode/prefill dispatches for one model.
+
+    Each step function exists in a *dense* and a *paged* flavor: the
+    paged twins additionally take a ``(B, blocks_per_seq)`` block table
+    routing every attention layer's physical block pool (see
+    ``models.attention.init_paged_kv_cache``).  The table is a traced
+    argument — its *values* change every iteration as blocks are
+    allocated, shared and freed, with zero retraces.
+    """
 
     def __init__(self, api):
         self.api = api
         self.cfg = api.cfg
         self.chunk_traces = 0
         self.decode_traces = 0
+        self.paged_chunk_traces = 0
+        self.paged_decode_traces = 0
         self.dispatches = 0
-        self._decode = jax.jit(self._make_decode())
-        self._chunk = jax.jit(self._make_chunk())
+        self._decode = jax.jit(self._make_decode(paged=False))
+        self._chunk = jax.jit(self._make_chunk(paged=False))
+        self._decode_paged = jax.jit(self._make_decode(paged=True))
+        self._chunk_paged = jax.jit(self._make_chunk(paged=True))
         self._reset = jax.jit(self._make_reset())
 
     # -- decode -------------------------------------------------------------
 
-    def _make_decode(self):
+    def _make_decode(self, paged: bool):
         decode = self.api.decode_fn
 
-        def step(params, caches, toks, lens, active):
-            self.decode_traces += 1          # trace-time side effect
+        def step(params, caches, toks, lens, active, tables=None):
+            if paged:                        # trace-time side effects
+                self.paged_decode_traces += 1
+            else:
+                self.decode_traces += 1
             batch = {"tokens": toks[:, None], "cache_len": lens,
                      "active": active}
+            if tables is not None:
+                batch["block_tables"] = tables
             logits, caches = decode(params, caches, batch)
             return select_tokens(logits, active, toks), caches
 
         return step
 
-    def decode(self, params, caches, toks, lens, active):
-        """toks/lens/active (B,) -> (next_tok (B,), new caches)."""
+    def decode(self, params, caches, toks, lens, active,
+               block_tables=None):
+        """toks/lens/active (B,) -> (next_tok (B,), new caches).
+        ``block_tables`` (B, blocks_per_seq) selects the paged twin."""
         self.dispatches += 1
-        return self._decode(params, caches, _device(toks, jnp.int32),
-                            _device(lens, jnp.int32),
-                            _device(active, bool))
+        if block_tables is None:
+            return self._decode(params, caches, _device(toks, jnp.int32),
+                                _device(lens, jnp.int32),
+                                _device(active, bool))
+        return self._decode_paged(params, caches,
+                                  _device(toks, jnp.int32),
+                                  _device(lens, jnp.int32),
+                                  _device(active, bool),
+                                  _device(block_tables, jnp.int32))
 
     # -- chunked prefill ----------------------------------------------------
 
-    def _make_chunk(self):
+    def _make_chunk(self, paged: bool):
         decode = self.api.decode_fn
 
-        def run_chunk(params, caches, toks, lens, n_valid):
-            self.chunk_traces += 1           # trace-time side effect
+        def run_chunk(params, caches, toks, lens, n_valid, tables=None):
+            if paged:                        # trace-time side effects
+                self.paged_chunk_traces += 1
+            else:
+                self.chunk_traces += 1
             B, C = toks.shape
 
             def step(carry, x):
@@ -85,6 +113,8 @@ class Stepper:
                 active = i < n_valid
                 batch = {"tokens": tok_col[:, None], "cache_len": lens,
                          "active": active}
+                if tables is not None:
+                    batch["block_tables"] = tables
                 logits, caches = decode(params, caches, batch)
                 first = jnp.where(i == n_valid - 1,
                                   greedy_serving(logits), first)
@@ -99,15 +129,24 @@ class Stepper:
 
         return run_chunk
 
-    def prefill_chunk(self, params, caches, toks, lens, n_valid):
+    def prefill_chunk(self, params, caches, toks, lens, n_valid,
+                      block_tables=None):
         """toks (B, C); lens/n_valid (B,).  Consumes ``n_valid[b]`` prompt
         tokens for row b starting at its ``lens[b]`` cache position.
         Returns (caches, new lens, first-token per row — meaningful only
-        for rows whose prompt completed inside this chunk)."""
+        for rows whose prompt completed inside this chunk).  The chunk's
+        writes land inside the blocks ``block_tables`` already maps (the
+        engine allocates a slot's prompt blocks at admission)."""
         self.dispatches += 1
-        return self._chunk(params, caches, _device(toks, jnp.int32),
-                           _device(lens, jnp.int32),
-                           _device(n_valid, jnp.int32))
+        if block_tables is None:
+            return self._chunk(params, caches, _device(toks, jnp.int32),
+                               _device(lens, jnp.int32),
+                               _device(n_valid, jnp.int32))
+        return self._chunk_paged(params, caches,
+                                 _device(toks, jnp.int32),
+                                 _device(lens, jnp.int32),
+                                 _device(n_valid, jnp.int32),
+                                 _device(block_tables, jnp.int32))
 
     # -- slot reset ---------------------------------------------------------
 
@@ -117,6 +156,14 @@ class Stepper:
                 out = {}
                 for name, a in cache.items():
                     if name == "pos":        # shared slot index, rowless
+                        out[name] = a
+                        continue
+                    if name in ("k_pool", "v_pool"):
+                        # physical block pools have no batch axis and
+                        # need no reset: every position a new tenant can
+                        # attend to (t <= cache_len) is freshly written
+                        # before it is read, and everything else is
+                        # masked to an exact zero contribution
                         out[name] = a
                         continue
                     shape = [1] * a.ndim

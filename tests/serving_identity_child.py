@@ -59,17 +59,27 @@ def run_arch(arch: str) -> dict:
     r_eng = ServingEngine(api, params, hbm_budget_bytes=1 << 30,
                           max_batch=MAX_BATCH, max_context=MAX_CONTEXT,
                           stepper=shared)
+    # continuous engine on the PHYSICALLY PAGED cache (the default) and
+    # on the dense per-slot baseline: all three must emit the same bits
     c_eng = ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
                              max_batch=MAX_BATCH, block_size=BLOCK,
                              max_context=MAX_CONTEXT, stepper=shared)
+    d_eng = ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
+                             max_batch=MAX_BATCH, block_size=BLOCK,
+                             max_context=MAX_CONTEXT, stepper=shared,
+                             paged=False)
     for r in reqs:
         r_eng.submit(fresh(r))
         c_eng.submit(fresh(r))
-    rd, cd = r_eng.run(), c_eng.run()
+        d_eng.submit(fresh(r))
+    rd, cd, dd = r_eng.run(), c_eng.run(), d_eng.run()
     n_tokens = sum(len(c.tokens) for c in cd.values())
 
     out = {
         "identical": all(rd[r.id].tokens == cd[r.id].tokens for r in reqs),
+        "paged_matches_dense": all(dd[r.id].tokens == cd[r.id].tokens
+                                   for r in reqs),
+        "paged": c_eng.paged,
         "n_tokens": n_tokens,
         "round_dispatches": r_eng.dispatches,
         "cont_dispatches": c_eng.dispatches,
@@ -113,6 +123,65 @@ def run_arch(arch: str) -> dict:
     solo.submit(fresh(reqs[-1]))
     out["isolation"] = solo.run()[reqs[-1].id].tokens \
         == cd[reqs[-1].id].tokens
+
+    # ALL paged engines above share one pool shape: ONE paged decode
+    # trace + ONE paged chunk trace for the whole matrix
+    out["single_paged_decode_trace"] = shared.paged_decode_traces == 1
+    out["single_paged_chunk_trace"] = shared.paged_chunk_traces == 1
+
+    # prefix sharing (attention-only archs): staggered lifetimes so
+    # later admissions overlap live holders of the same prompt prefix —
+    # streams must stay bit-identical with sharing on vs off, with
+    # physical blocks actually mapped instead of allocated
+    if c_eng.prefix_sharing:
+        rng = np.random.default_rng(7)
+        pfx = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        spr = [Request(200 + i,
+                       np.concatenate([pfx, rng.integers(
+                           0, cfg.vocab_size, 1 + i % 3)
+                           .astype(np.int32)]),
+                       max_new_tokens=3 + (i * 5) % 9)
+               for i in range(6)]
+        share_on = ContinuousEngine(api, params,
+                                    hbm_budget_bytes=1 << 30,
+                                    max_batch=MAX_BATCH,
+                                    block_size=BLOCK,
+                                    max_context=MAX_CONTEXT,
+                                    stepper=shared)
+        share_off = ContinuousEngine(api, params,
+                                     hbm_budget_bytes=1 << 30,
+                                     max_batch=MAX_BATCH,
+                                     block_size=BLOCK,
+                                     max_context=MAX_CONTEXT,
+                                     stepper=shared,
+                                     prefix_sharing=False)
+        for r in spr:
+            share_on.submit(fresh(r))
+            share_off.submit(fresh(r))
+        sd, nd = share_on.run(), share_off.run()
+        out["sharing_identical"] = all(sd[r.id].tokens == nd[r.id].tokens
+                                       for r in spr)
+        out["shared_hits"] = share_on.kv.shared_block_hits
+        out["sharing_saved_blocks"] = (share_off.kv.acquired_blocks
+                                       - share_on.kv.acquired_blocks)
+
+    # paged streams must be invariant to the block size — sweep 1
+    # (token-per-block), 16 (= max_batch boundary) and a non-power-of-
+    # two; each size is a new pool shape, so each sweep engine brings
+    # its own stepper (shape change retraces regardless)
+    if out["has_attn"]:
+        sweeps = []
+        for bsz in (1, 5, 16):
+            eng = ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
+                                   max_batch=MAX_BATCH, block_size=bsz,
+                                   max_context=MAX_CONTEXT,
+                                   stepper=Stepper(api))
+            for r in reqs:
+                eng.submit(fresh(r))
+            ed = eng.run()
+            sweeps.append(all(ed[r.id].tokens == cd[r.id].tokens
+                              for r in reqs))
+        out["block_size_invariant"] = all(sweeps)
 
     # greedy decode must be deterministic across engine instances
     again = ServingEngine(api, params, hbm_budget_bytes=1 << 30,

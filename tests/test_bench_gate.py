@@ -1,0 +1,94 @@
+"""benchmarks/gate.py regression-gate logic (no engines involved)."""
+
+import copy
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.gate import gate  # noqa: E402
+
+BASE = {
+    "workload": {"requests": 9, "max_batch": 4, "block_size": 4,
+                 "max_context": 32, "seed": 0},
+    "round": {"dispatches_per_token": 0.68, "tok_per_s": 100.0},
+    "continuous": {"dispatches_per_token": 0.39, "tok_per_s": 170.0},
+    "shared_prefix": {"dispatches_per_token": 0.5,
+                      "prompt_blocks_acquired": 26,
+                      "sharing_engaged": True},
+    "identical_streams": True,
+    "speedup_tok_per_s": 1.7,
+}
+
+
+def test_gate_passes_identical_and_improved():
+    assert gate(BASE, copy.deepcopy(BASE), 0.15) == []
+    better = copy.deepcopy(BASE)
+    better["continuous"]["dispatches_per_token"] = 0.2
+    better["speedup_tok_per_s"] = 3.0
+    better["shared_prefix"]["prompt_blocks_acquired"] = 10
+    assert gate(BASE, better, 0.15) == []
+
+
+def test_gate_tolerates_noise_within_thresholds():
+    noisy = copy.deepcopy(BASE)
+    noisy["continuous"]["dispatches_per_token"] = 0.43   # +10%
+    noisy["speedup_tok_per_s"] = 1.2                     # -29%
+    assert gate(BASE, noisy, 0.15) == []
+
+
+def test_gate_fails_dispatch_regression():
+    bad = copy.deepcopy(BASE)
+    bad["continuous"]["dispatches_per_token"] = 0.39 * 1.2
+    out = gate(BASE, bad, 0.15)
+    assert len(out) == 1 and "dispatches/token" in out[0]
+
+
+def test_gate_fails_speedup_collapse_and_flags():
+    bad = copy.deepcopy(BASE)
+    bad["speedup_tok_per_s"] = 0.9
+    bad["identical_streams"] = False
+    bad["shared_prefix"]["sharing_engaged"] = False
+    out = gate(BASE, bad, 0.15)
+    assert any("speedup" in v for v in out)
+    assert any("identical_streams" in v for v in out)
+    assert any("sharing" in v for v in out)
+
+
+def test_gate_fails_on_missing_metric():
+    bad = copy.deepcopy(BASE)
+    del bad["shared_prefix"]
+    assert gate(BASE, bad, 0.15)
+
+
+def test_gate_rejects_workload_mismatch():
+    """Workload-dependent metrics must never be %-compared across
+    different workloads (e.g. full vs --quick baselines)."""
+    other = copy.deepcopy(BASE)
+    other["workload"]["requests"] = 18
+    out = gate(BASE, other, 0.15)
+    assert len(out) == 1 and "workload mismatch" in out[0]
+
+
+def test_gate_cli_roundtrip(tmp_path):
+    b = tmp_path / "base.json"
+    f = tmp_path / "fresh.json"
+    b.write_text(json.dumps(BASE))
+    f.write_text(json.dumps(BASE))
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(repo, "benchmarks", "gate.py"),
+         "--baseline", str(b), "--fresh", str(f)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    bad = copy.deepcopy(BASE)
+    bad["continuous"]["dispatches_per_token"] = 9.9
+    f.write_text(json.dumps(bad))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(repo, "benchmarks", "gate.py"),
+         "--baseline", str(b), "--fresh", str(f)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "FAIL" in proc.stdout

@@ -1,0 +1,250 @@
+"""Paged-attention Pallas kernels vs oracles (interpret mode).
+
+Validates the block-table walk (scalar-prefetched index maps), per-row
+``cache_len`` masking, sliding windows, the in-place append path, and
+agreement with BOTH the dense decode kernel and the models' paged jnp
+step — across block sizes 1, 16 and a non-power-of-two, with ragged
+per-row lengths and scrambled (non-contiguous, partially shared) block
+tables.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention_ref
+from repro.kernels.paged_attention.ops import (gather_kv_ref,
+                                               paged_append_op,
+                                               paged_append_ref,
+                                               paged_decode_attention_op,
+                                               paged_decode_attention_ref)
+
+TOL = {"float32": dict(rtol=2e-5, atol=2e-5),
+       "bfloat16": dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _scrambled_tables(rng, B, bpr, num_blocks, share_rows=False):
+    """Random disjoint block tables (plus optional shared prefix rows):
+    physical rows deliberately non-contiguous and out of order."""
+    perm = rng.permutation(num_blocks)[:B * bpr].reshape(B, bpr)
+    tables = perm.astype(np.int32)
+    if share_rows and B > 1:
+        tables[1, 0] = tables[0, 0]          # a prefix-shared block
+    return tables
+
+
+def _pools(rng, key, num_blocks, bs, K, D, dtype):
+    k_pool = _rand(jax.random.fold_in(key, 0),
+                   (num_blocks + 1, bs, K, D), dtype)
+    v_pool = _rand(jax.random.fold_in(key, 1),
+                   (num_blocks + 1, bs, K, D), dtype)
+    return k_pool, v_pool
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("B,H,K,D,bs,bpr,window", [
+    (2, 4, 2, 16, 16, 4, 0),       # GQA, block 16
+    (3, 2, 2, 32, 1, 8, 0),        # block_size 1 (one token per block)
+    (2, 4, 1, 16, 5, 7, 0),        # non-power-of-two block (MQA)
+    (1, 4, 2, 16, 8, 4, 12),       # sliding window
+])
+def test_paged_decode_sweep(dtype, B, H, K, D, bs, bpr, window):
+    rng = np.random.default_rng(0)
+    key = jax.random.key(1)
+    num_blocks = 2 * B * bpr
+    k_pool, v_pool = _pools(rng, key, num_blocks, bs, K, D, dtype)
+    q = _rand(jax.random.fold_in(key, 2), (B, H, D), dtype)
+    tables = _scrambled_tables(rng, B, bpr, num_blocks, share_rows=True)
+    lens = rng.integers(0, bpr * bs, B).astype(np.int32)   # ragged rows
+    got = paged_decode_attention_op(q, k_pool, v_pool, tables, lens,
+                                    window=window, interpret=True)
+    ref = paged_decode_attention_ref(q, k_pool, v_pool, tables, lens,
+                                     window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_paged_decode_matches_dense_decode_kernel():
+    """Walking the block table reads the same cache a dense layout
+    holds: gather the paged pool into (B, K, T, D) and compare against
+    the dense decode kernel's oracle."""
+    rng = np.random.default_rng(3)
+    key = jax.random.key(4)
+    B, H, K, D, bs, bpr = 2, 4, 2, 16, 4, 8
+    num_blocks = 2 * B * bpr
+    k_pool, v_pool = _pools(rng, key, num_blocks, bs, K, D, "float32")
+    q = _rand(jax.random.fold_in(key, 2), (B, H, D), "float32")
+    tables = _scrambled_tables(rng, B, bpr, num_blocks)
+    lens = np.array([13, 30], np.int32)
+    got = paged_decode_attention_op(q, k_pool, v_pool, tables, lens,
+                                    interpret=True)
+    T = bpr * bs
+    k = np.moveaxis(gather_kv_ref(k_pool, tables), 2, 1)   # (B, K, T, D)
+    v = np.moveaxis(gather_kv_ref(v_pool, tables), 2, 1)
+    pos = np.arange(T, dtype=np.int32)
+    ref = decode_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), jnp.asarray(pos),
+                               jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_ignores_unallocated_table_entries():
+    """Entries past a row's allocated blocks point at the scratch row;
+    whatever they contain must not leak into the output (masked)."""
+    rng = np.random.default_rng(5)
+    key = jax.random.key(6)
+    B, H, K, D, bs, bpr = 2, 2, 2, 16, 4, 6
+    num_blocks = 2 * B * bpr
+    k_pool, v_pool = _pools(rng, key, num_blocks, bs, K, D, "float32")
+    q = _rand(jax.random.fold_in(key, 2), (B, H, D), "float32")
+    tables = _scrambled_tables(rng, B, bpr, num_blocks)
+    lens = np.array([6, 9], np.int32)
+    base = paged_decode_attention_op(q, k_pool, v_pool, tables, lens,
+                                     interpret=True)
+    # repoint every block beyond the live range at scratch (garbage)
+    t2 = tables.copy()
+    for b in range(B):
+        t2[b, (int(lens[b]) // bs) + 1:] = num_blocks    # scratch row
+    redirected = paged_decode_attention_op(q, k_pool, v_pool, t2, lens,
+                                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(base),
+                                  np.asarray(redirected))
+
+
+# --------------------------------------------------------------------------
+# append
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("B,K,D,bs,bpr,C", [
+    (2, 2, 16, 4, 6, 8),           # chunk spans block boundaries
+    (3, 2, 16, 1, 8, 3),           # block_size 1
+    (2, 1, 32, 5, 4, 7),           # non-power-of-two block
+])
+def test_paged_append_sweep(dtype, B, K, D, bs, bpr, C):
+    rng = np.random.default_rng(7)
+    key = jax.random.key(8)
+    num_blocks = 2 * B * bpr
+    k_pool, v_pool = _pools(rng, key, num_blocks, bs, K, D, dtype)
+    k_new = _rand(jax.random.fold_in(key, 2), (B, C, K, D), dtype)
+    v_new = _rand(jax.random.fold_in(key, 3), (B, C, K, D), dtype)
+    tables = _scrambled_tables(rng, B, bpr, num_blocks)
+    lens = rng.integers(0, (bpr - 1) * bs - C, B).astype(np.int32)
+    n_valid = rng.integers(0, C + 1, B).astype(np.int32)   # ragged tails
+    got_k, got_v = paged_append_op(jnp.array(k_pool), jnp.array(v_pool),
+                                   k_new, v_new, tables, lens, n_valid,
+                                   interpret=True)
+    ref_k, ref_v = paged_append_ref(k_pool, v_pool, k_new, v_new,
+                                    tables, lens, n_valid)
+    # the scratch row swallows invalid writes — exclude it from compare
+    np.testing.assert_allclose(
+        np.asarray(got_k, np.float32)[:num_blocks],
+        ref_k.astype(np.float32)[:num_blocks], **TOL[dtype])
+    np.testing.assert_allclose(
+        np.asarray(got_v, np.float32)[:num_blocks],
+        ref_v.astype(np.float32)[:num_blocks], **TOL[dtype])
+
+
+def test_paged_append_then_decode_roundtrip():
+    """Prefill a prompt through paged_append block by block, then decode
+    against the filled pool: equals dense attention over the prompt."""
+    rng = np.random.default_rng(9)
+    key = jax.random.key(10)
+    B, H, K, D, bs, bpr, C = 2, 4, 2, 16, 4, 4, 4
+    num_blocks = B * bpr
+    k_pool = jnp.zeros((num_blocks + 1, bs, K, D), jnp.float32)
+    v_pool = jnp.zeros_like(k_pool)
+    tables = _scrambled_tables(rng, B, bpr, num_blocks)
+    S = bpr * bs
+    k_seq = _rand(jax.random.fold_in(key, 0), (B, S, K, D), "float32")
+    v_seq = _rand(jax.random.fold_in(key, 1), (B, S, K, D), "float32")
+    plens = np.array([S - 3, S // 2], np.int32)
+    lens = np.zeros(B, np.int32)
+    for t in range(0, S, C):
+        n_valid = np.clip(plens - t, 0, C)
+        k_pool, v_pool = paged_append_op(
+            k_pool, v_pool, k_seq[:, t:t + C], v_seq[:, t:t + C],
+            tables, lens, n_valid, interpret=True)
+        lens += n_valid
+    q = _rand(jax.random.fold_in(key, 2), (B, H, D), "float32")
+    got = paged_decode_attention_op(q, k_pool, v_pool, tables, plens - 1,
+                                    interpret=True)
+    kd = np.moveaxis(np.asarray(k_seq), 2, 1)              # (B, K, S, D)
+    vd = np.moveaxis(np.asarray(v_seq), 2, 1)
+    pos = np.arange(S, dtype=np.int32)
+    ref = decode_attention_ref(q, jnp.asarray(kd), jnp.asarray(vd),
+                               jnp.asarray(pos), jnp.asarray(plens - 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_append_gated_rows_leave_pool_untouched():
+    """n_valid = 0 rows must not disturb ANY non-scratch pool row."""
+    rng = np.random.default_rng(11)
+    key = jax.random.key(12)
+    B, K, D, bs, bpr, C = 2, 2, 16, 4, 4, 4
+    num_blocks = B * bpr
+    k_pool, v_pool = _pools(rng, key, num_blocks, bs, K, D, "float32")
+    k_new = _rand(jax.random.fold_in(key, 2), (B, C, K, D), "float32")
+    v_new = _rand(jax.random.fold_in(key, 3), (B, C, K, D), "float32")
+    tables = _scrambled_tables(rng, B, bpr, num_blocks)
+    zero = np.zeros(B, np.int32)
+    got_k, got_v = paged_append_op(jnp.array(k_pool), jnp.array(v_pool),
+                                   k_new, v_new, tables, zero, zero,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_k)[:num_blocks],
+                                  np.asarray(k_pool)[:num_blocks])
+    np.testing.assert_array_equal(np.asarray(got_v)[:num_blocks],
+                                  np.asarray(v_pool)[:num_blocks])
+
+
+# --------------------------------------------------------------------------
+# kernel vs the models' paged jnp step (integration)
+# --------------------------------------------------------------------------
+
+def test_paged_kernel_matches_model_paged_cache():
+    """The serving engines' jnp paged step and the Pallas kernel read
+    the same physical layout: fill a pool through the model path, then
+    decode with the kernel."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("stablelm-3b").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    B, bs, bpr = 2, 4, 4
+    P = B * bpr
+    caches = api.init_paged_caches(B, P, bs, jnp.float32)
+    tables = np.arange(P, dtype=np.int32).reshape(B, bpr)
+    rng = np.random.default_rng(0)
+    lens = np.zeros(B, np.int32)
+    for _ in range(9):
+        toks = rng.integers(0, cfg.vocab_size, B).astype(np.int32)
+        batch = {"tokens": toks[:, None], "cache_len": jnp.asarray(lens),
+                 "active": jnp.ones(B, bool),
+                 "block_tables": jnp.asarray(tables)}
+        _, caches = api.decode_fn(params, caches, batch)
+        lens += 1
+    layer = caches["prefix"][0] if caches["prefix"] else None
+    if layer is None or "k_pool" not in layer:
+        layer = {kk: vv[0] for kk, vv in caches["period"][0].items()}
+    H = cfg.num_heads
+    D = cfg.resolved_head_dim()
+    q = _rand(jax.random.key(5), (B, H, D), "float32")
+    got = paged_decode_attention_op(q, layer["k_pool"], layer["v_pool"],
+                                    tables, lens - 1, interpret=True)
+    ref = paged_decode_attention_ref(q, np.asarray(layer["k_pool"]),
+                                     np.asarray(layer["v_pool"]),
+                                     tables, lens - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

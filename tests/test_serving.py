@@ -47,8 +47,42 @@ def test_continuous_streams_bit_identical_to_round(identity_report):
     benchmarks/serving.py — tiny identity workloads can tie.)"""
     for arch in IDENTITY_ARCHS:
         r = identity_report[arch]
+        assert r["paged"], f"{arch}: continuous engine not on paged cache"
         assert r["identical"], f"{arch}: streams diverged"
         assert r["n_tokens"] > 0
+
+
+def test_paged_cache_bit_identical_to_dense(identity_report):
+    """The physically paged cache is a pure memory-layout change: the
+    continuous engine must emit the same bits on paged and dense caches,
+    for every block size in the matrix (1, non-power-of-two, 16)."""
+    for arch in IDENTITY_ARCHS:
+        r = identity_report[arch]
+        assert r["paged_matches_dense"], f"{arch}: paged != dense"
+        if r["has_attn"]:
+            assert r["block_size_invariant"], \
+                f"{arch}: block size changed decoded tokens"
+
+
+def test_prefix_sharing_lossless_and_engaged(identity_report):
+    """Cross-request prefix sharing must not change any stream while
+    actually mapping blocks instead of allocating them."""
+    for arch in IDENTITY_ARCHS:
+        r = identity_report[arch]
+        if "sharing_identical" not in r:
+            continue                  # hybrid/SSM archs: sharing off
+        assert r["sharing_identical"], f"{arch}: sharing changed streams"
+        assert r["shared_hits"] > 0, f"{arch}: sharing never engaged"
+        assert r["sharing_saved_blocks"] > 0, arch
+
+
+def test_single_paged_trace_across_engines(identity_report):
+    """Every paged engine with one pool shape — including preempting,
+    tight-budget and sharing engines — reuses ONE compiled paged decode
+    + chunk trace (block tables are traced values, not shapes)."""
+    for arch in IDENTITY_ARCHS:
+        assert identity_report[arch]["single_paged_decode_trace"], arch
+        assert identity_report[arch]["single_paged_chunk_trace"], arch
 
 
 def test_preemption_replays_identical_streams(identity_report):
