@@ -3,10 +3,17 @@ committed baseline and FAIL on regression.
 
 Metrics and how they are compared:
 
-* ``dispatches_per_token`` (round + continuous engines, and the
-  shared-prefix workload) — fully deterministic given the workload, so
-  gated directly: fresh may not exceed baseline by more than
-  ``--threshold`` (default 15 %).
+* ``dispatches_per_token`` (round + continuous engines, the megastep
+  N in {1, 4, 8} sweep, and the shared-prefix workload) — fully
+  deterministic given the workload, so gated directly: fresh may not
+  exceed baseline by more than ``--threshold`` (default 15 %).
+* the megastep sweep additionally carries a **megastep-aware
+  structural gate**, machine-independent within the fresh report: the
+  N=8 engine must keep at least a 2x dispatches/token reduction over
+  its own N=1 run (matching benchmarks/serving.py's self-check; the
+  committed ratio is ~2.55x, so 2x leaves headroom for benign
+  scheduling shifts while still catching the scan losing its fusion),
+  and streams must stay identical across every N.
 * throughput — raw tok/s is machine-dependent (the committed baseline
   and the CI runner are different hardware), so the gate uses the
   run-internal **speedup ratio** (continuous tok/s / round tok/s, both
@@ -92,6 +99,20 @@ def gate(baseline: dict, fresh: dict, threshold: float,
                     "round dispatches/token")
     worse_if_higher("shared_prefix.dispatches_per_token",
                     "shared-prefix dispatches/token")
+    for m in (1, 4, 8):
+        worse_if_higher(f"megastep.n{m}.dispatches_per_token",
+                        f"megastep N={m} dispatches/token")
+    # megastep-aware structural gate (within the fresh report)
+    f1 = _get(fresh, "megastep.n1.dispatches_per_token")
+    f8 = _get(fresh, "megastep.n8.dispatches_per_token")
+    if f1 is None or f8 is None:
+        bad.append("megastep sweep missing from fresh report")
+    elif f8 * 2.0 > f1:
+        bad.append(f"megastep N=8 lost its dispatch fusion: "
+                   f"{f8} disp/tok vs {f1} at N=1 (< 2x reduction)")
+    if _get(baseline, "megastep.identical_across_n") and \
+            not _get(fresh, "megastep.identical_across_n"):
+        bad.append("megastep streams no longer identical across N")
     # tok/s, normalized within each run (see module docstring)
     worse_if_lower("speedup_tok_per_s",
                    "continuous/round tok/s speedup",

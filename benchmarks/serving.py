@@ -8,8 +8,16 @@ block cache.  Reports and persists to ``BENCH_serving.json`` (written
 to the repo root regardless of CWD; override with ``--out``):
 
 * throughput (generated tokens / wall-second) per engine,
-* p50 / p95 TTFT (run start -> first generated token) per engine,
+* p50 / p95 TTFT per engine, in BOTH accountings: run start -> first
+  generated token (queueing included) and admission -> first generated
+  token.  Under a decode megastep the first token only becomes
+  observable when the fused dispatch returns, so both are stamped from
+  post-reconciliation timestamps — never back-dated into the scan,
 * model dispatches per generated token per engine,
+* a **megastep** section: dispatches/token of the continuous engine at
+  megastep N in {1, 4, 8} on the same workload, with stream identity
+  across every N asserted (the fused scan must be a pure dispatch-count
+  optimization),
 * block-pool reuse count and preemptions of the continuous engine,
 * whether the two engines emitted bit-identical greedy streams,
 * a **shared-prefix workload**: staggered requests sharing one long
@@ -71,7 +79,7 @@ def run_engine(engine, reqs, repeats: int = 1, factory=None):
     for rep in range(max(1, repeats)):
         eng = engine if rep == 0 else factory()
         for r in reqs:
-            eng.submit(Request(r.id, r.prompt, r.max_new_tokens))
+            eng.submit(Request(r.id, r.prompt, r.max_new_tokens, r.eos_id))
         t0 = time.perf_counter()
         done = eng.run()
         walls.append(time.perf_counter() - t0)
@@ -83,6 +91,7 @@ def run_engine(engine, reqs, repeats: int = 1, factory=None):
     engine, done, wall = engine0, done0, min(walls)
     tokens = sum(len(c.tokens) for c in done.values())
     ttfts = np.array([c.ttft_s for c in done.values()])
+    ttfts_adm = np.array([c.ttft_admit_s for c in done.values()])
     return {
         "requests": len(done),
         "tokens": tokens,
@@ -92,6 +101,10 @@ def run_engine(engine, reqs, repeats: int = 1, factory=None):
         "dispatches_per_token": round(engine.dispatches / tokens, 4),
         "ttft_p50_ms": round(float(np.percentile(ttfts, 50)) * 1e3, 2),
         "ttft_p95_ms": round(float(np.percentile(ttfts, 95)) * 1e3, 2),
+        "ttft_admit_p50_ms": round(
+            float(np.percentile(ttfts_adm, 50)) * 1e3, 2),
+        "ttft_admit_p95_ms": round(
+            float(np.percentile(ttfts_adm, 95)) * 1e3, 2),
     }, {i: done[i].tokens for i in done}
 
 
@@ -112,11 +125,23 @@ def run_shared_prefix(api, params, stepper, cfg, args, n_requests):
         [prefix, rng.integers(0, cfg.vocab_size, 1 + i % 3)
          .astype(np.int32)]),
         max_new_tokens=3 + (i * 5) % 9) for i in range(n)]
-    eng = ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
-                           max_batch=args.max_batch,
-                           prefill_chunk=16,
-                           block_size=args.block_size,
-                           max_context=args.max_context, stepper=stepper)
+    def mk():
+        return ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
+                                max_batch=args.max_batch,
+                                prefill_chunk=16,
+                                block_size=args.block_size,
+                                max_context=args.max_context,
+                                stepper=stepper,
+                                megastep=args.megastep)
+
+    # warm THIS workload's megastep scan lengths (its budgets/flush
+    # clips differ from the mixed workload's, so the main warmup does
+    # not cover them) — the measured run must not time compiles
+    warm = mk()
+    for r in reqs:
+        warm.submit(Request(r.id, r.prompt, r.max_new_tokens, r.eos_id))
+    warm.run()
+    eng = mk()
     stats, streams = run_engine(eng, reqs)
     prompt_blocks = sum(-(-len(r.prompt) // args.block_size)
                         for r in reqs)
@@ -144,6 +169,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timing repeats; best wall time is reported")
+    ap.add_argument("--megastep", type=int, default=8,
+                    help="megastep length N of the measured continuous "
+                         "engine (the sweep always covers 1/4/8)")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="output path; relative paths resolve against "
                          "the REPO ROOT, not the CWD")
@@ -174,27 +202,28 @@ def main():
                   prefill_chunk=16, max_context=args.max_context,
                   stepper=shared)
 
-    # warm the shared stepper so neither measured engine pays compiles:
-    # a long prompt forces the chunk path, and BOTH cache layouts are
-    # warmed (paged twins for the continuous engine, dense twins for
-    # the round engine)
     import numpy as np
     from repro.runtime.engine import Request
-    for paged in (True, False):
-        warm = ContinuousEngine(api, params, block_size=args.block_size,
-                                paged=paged, **common)
-        warm.submit(Request(-1, np.arange(args.max_context // 2,
-                                          dtype=np.int32)
-                            % cfg.vocab_size,
-                            max_new_tokens=2))
-        warm.run()
 
     def mk_round():
         return ServingEngine(api, params, **common)
 
-    def mk_cont():
+    def mk_cont(megastep=args.megastep):
         return ContinuousEngine(api, params, block_size=args.block_size,
-                                **common)
+                                megastep=megastep, **common)
+
+    # warm the shared stepper so neither measured engine (nor any
+    # request's TTFT) pays compiles: run the REAL workload once through
+    # both engines and every megastep length the sweep measures — the
+    # megastep traces one executable per distinct scan length, so only
+    # the full workload exercises them all (the round engine's pass
+    # covers the dense chunk/decode twins; every measured continuous
+    # engine is paged)
+    for warm in ([mk_round()] +
+                 [mk_cont(m) for m in sorted({1, 4, 8, args.megastep})]):
+        for r in reqs:
+            warm.submit(Request(r.id, r.prompt, r.max_new_tokens, r.eos_id))
+        warm.run()
 
     round_stats, round_streams = run_engine(
         mk_round(), reqs, repeats=args.repeats, factory=mk_round)
@@ -204,8 +233,28 @@ def main():
     cont_stats["block_reuse_count"] = cont.kv.reuse_count
     cont_stats["preemptions"] = cont.preemptions
     cont_stats["iterations"] = cont.iterations
+    cont_stats["megasteps"] = cont.megasteps
+    cont_stats["megastep_steps"] = cont.megastep_steps
+    cont_stats["megastep_n"] = cont.megastep_n
     cont_stats["paged"] = cont.paged
     cont_stats["peak_physical_blocks"] = cont.kv.physical_kv_blocks
+
+    # megastep sweep: dispatches/token at N in {1, 4, 8} on the same
+    # workload; every N must emit the same bits (deterministic given the
+    # workload — the numbers the bench-gate pins)
+    mega = {}
+    mega_streams = {}
+    for m in (1, 4, 8):
+        eng = mk_cont(m)
+        m_stats, m_streams = run_engine(eng, reqs)
+        mega[f"n{m}"] = {
+            "dispatches": m_stats["dispatches"],
+            "dispatches_per_token": m_stats["dispatches_per_token"],
+            "megasteps": eng.megasteps,
+        }
+        mega_streams[m] = m_streams
+    mega["identical_across_n"] = (
+        mega_streams[1] == mega_streams[4] == mega_streams[8])
 
     prefix_stats = run_shared_prefix(api, params, shared, cfg, args,
                                      n_requests)
@@ -221,10 +270,12 @@ def main():
                      "max_batch": args.max_batch,
                      "block_size": args.block_size,
                      "max_context": args.max_context,
-                     "seed": args.seed},
+                     "seed": args.seed,
+                     "megastep": args.megastep},
         "async_dispatch": args.async_dispatch,
         "round": round_stats,
         "continuous": cont_stats,
+        "megastep": mega,
         "shared_prefix": prefix_stats,
         "identical_streams": identical,
         "mismatched_tokens": mismatched,
@@ -242,6 +293,10 @@ def main():
           f"preemptions {cont.preemptions}, "
           f"identical streams: {identical}, "
           f"speedup x{report['speedup_tok_per_s']}")
+    print("megastep sweep: " + ", ".join(
+        f"N={m} -> {mega[f'n{m}']['dispatches_per_token']} disp/tok"
+        for m in (1, 4, 8)) +
+        f" (identical across N: {mega['identical_across_n']})")
     print(f"shared-prefix: {prefix_stats['prompt_blocks_acquired']}"
           f"/{prefix_stats['prompt_blocks_no_sharing']} prompt blocks "
           f"allocated ({prefix_stats['shared_block_hits']} shared hits, "
@@ -263,6 +318,14 @@ def main():
             "continuous engine did not reduce dispatches/token"
         assert prefix_stats["sharing_engaged"], \
             "prefix sharing allocated the full no-sharing block count"
+        assert mega["identical_across_n"], \
+            "megastep changed decoded streams across N"
+        n1 = mega["n1"]["dispatches_per_token"]
+        n8 = mega["n8"]["dispatches_per_token"]
+        assert n8 <= mega["n4"]["dispatches_per_token"] <= n1, \
+            f"megastep dispatches/token not monotone: {mega}"
+        assert n8 * 2 <= n1, \
+            f"megastep N=8 under 2x dispatch reduction: {n8} vs {n1}"
     return report
 
 

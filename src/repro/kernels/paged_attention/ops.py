@@ -1,4 +1,16 @@
-"""jit'd wrappers for the paged_attention kernels."""
+"""jit'd wrappers for the paged_attention kernels.
+
+The ``*_op`` wrappers are standalone dispatch entry points (with pool
+donation on append).  When fusing N serving iterations into one
+dispatch — the decode megastep's ``lax.scan`` — call the raw kernels
+(:func:`paged_append` / :func:`paged_decode_attention`) inside the
+traced scan body instead: ``donate_argnums`` is an entry-point
+annotation that means nothing mid-trace, and the scan carry already
+keeps the pools in place.  Both kernels are scan-safe by construction —
+block tables, lens and n_valid are scalar-prefetch *values*, so a carry
+advancing ``lens`` each step re-uses one compiled kernel
+(tests/test_paged_kernels.py::test_paged_append_decode_under_scan).
+"""
 
 from __future__ import annotations
 

@@ -2,12 +2,19 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
         --requests 8 --max-new 16 [--budget-mb 256] \
-        [--engine round|continuous]
+        [--engine round|continuous] [--megastep N]
 
 ``--engine continuous`` serves through the iteration-level slot-table
 engine on the physically paged block KV cache with cross-request
 prefix sharing (decoder-only models); ``--dense-cache`` falls back to
 the dense per-slot cache baseline.
+
+``--megastep N`` (or env ``PARALLAX_MEGASTEP``; default 8) fuses up to
+N decode iterations into ONE dispatch — greedy sampling, EOS checks and
+per-row termination run on device inside a ``lax.scan``, and the engine
+reserves KV blocks for the whole scan up front, reconciling streams,
+admission and unused blocks afterwards.  ``--megastep 1`` restores the
+per-iteration dispatch path (bit-identical streams either way).
 """
 
 from __future__ import annotations
@@ -27,7 +34,7 @@ from repro.runtime.engine import (ContinuousEngine, Request,
 def serve(arch: str, n_requests: int = 8, max_new: int = 16,
           budget_mb: int = 256, prompt_len: int = 12, seed: int = 0,
           max_batch: int = 4, engine_mode: str = "round",
-          paged: bool = True):
+          paged: bool = True, megastep: "int | None" = None):
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.key(seed))
@@ -36,7 +43,7 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
                                   hbm_budget_bytes=budget_mb << 20,
                                   max_batch=max_batch,
                                   max_context=prompt_len + max_new,
-                                  paged=paged)
+                                  paged=paged, megastep=megastep)
     else:
         engine = ServingEngine(api, params,
                                hbm_budget_bytes=budget_mb << 20,
@@ -64,6 +71,9 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
         total = sum(len(c.tokens) for c in done.values())
         print(f"iterations {engine.iterations}, dispatches "
               f"{engine.dispatches} ({engine.dispatches/total:.2f}/tok), "
+              f"megasteps {engine.megasteps} "
+              f"({engine.megastep_steps} fused iters, "
+              f"N={engine.megastep_n}), "
               f"preemptions {engine.preemptions}")
     return done
 
@@ -80,9 +90,14 @@ def main():
     ap.add_argument("--dense-cache", action="store_true",
                     help="dense per-slot KV arrays instead of the "
                          "physically paged block pool")
+    ap.add_argument("--megastep", type=int, default=None,
+                    help="decode iterations fused per dispatch "
+                         "(default: env PARALLAX_MEGASTEP, then 8; "
+                         "1 = per-iteration dispatch path)")
     args = ap.parse_args()
     serve(args.arch, args.requests, args.max_new, args.budget_mb,
-          engine_mode=args.engine, paged=not args.dense_cache)
+          engine_mode=args.engine, paged=not args.dense_cache,
+          megastep=args.megastep)
 
 
 if __name__ == "__main__":

@@ -284,7 +284,16 @@ def decode_step_attention(params, cfg, x, cache, cache_len,
     ``pos`` array is unused).  ``active`` (B,) bool gates the cache
     write per row: inactive rows leave every cache entry untouched, so
     one fixed-shape dispatch can serve a slot table where requests join
-    and leave between iterations.
+    and leave between iterations.  Both vectors double as ``lax.scan``
+    carries in the serving runtime's decode megastep, advancing per-row
+    inside ONE dispatch — everything below is traced arithmetic on
+    them, never host values.
+
+    Because every readable position (``t <= cache_len[b]``, window-
+    clipped) is freshly written by the row's own prefill/decode steps
+    and everything else is masked to an exact-zero softmax weight, a
+    new slot tenant needs NO cache reset on attention-only models —
+    the engine skips the reset dispatch unless SSM/conv state exists.
 
     Returns ``(out (B,1,d), new_cache)``.
     """

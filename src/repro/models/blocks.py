@@ -137,6 +137,15 @@ def decode_block(params, cfg, x, cache, kind, cache_len,
     batching: inactive slot-table rows must not mutate their caches).
     ``block_tables`` (B, blocks_per_seq) routes paged attention caches
     (see attention.init_paged_kv_cache); ignored by dense caches.
+
+    ``cache_len`` and ``active`` are *scan carries* in the serving
+    runtime: the decode megastep threads them through ``lax.scan`` with
+    per-row values advancing every fused iteration, so both must be
+    consumed as traced arrays (vector per-row positions, no host
+    round-trips) — which also guarantees a row flipping inactive
+    mid-megastep freezes BOTH its attention KV writes (masked inside
+    ``decode_step_attention``) and its SSM/conv state (the
+    ``jnp.where`` below).
     """
     mixer, _ = kind
     norm = make_norm(cfg.norm_type)

@@ -249,7 +249,17 @@ def init_mamba_cache(cfg, batch: int, dtype):
 
 
 def mamba_decode_step(params, cfg, x, cache):
-    """Single-token decode.  x: (b, 1, d) -> (y (b,1,d), new_cache)."""
+    """Single-token decode.  x: (b, 1, d) -> (y (b,1,d), new_cache).
+
+    Scan-carry contract (serving): this step runs not only as its own
+    dispatch but as the body of the prefill-chunk scan AND the decode
+    megastep (``runtime.stepper``), with ``cache`` a ``lax.scan`` carry
+    — so it must stay a pure function of traced values (no host reads,
+    no python-int shapes derived from the state).  Row gating lives in
+    the caller (``blocks.decode_block`` masks the state update by
+    ``active``), which is what lets a megastep's finished rows stop
+    mutating their SSM state mid-scan.
+    """
     s = cfg.ssm
     b = x.shape[0]
     d_inner, nheads, conv_dim = _dims(cfg)

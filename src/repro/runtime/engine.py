@@ -43,6 +43,7 @@ float noise cannot flip token selection either.
 
 from __future__ import annotations
 
+import os
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -54,12 +55,38 @@ from repro.core.scheduler import greedy_select, incremental_select
 from .kv_cache import BlockKVCache, KVCacheManager, request_peak_bytes
 from .stepper import Stepper
 
+MEGASTEP_ENV = "PARALLAX_MEGASTEP"
+MEGASTEP_DEFAULT = 8
+
+
+def megastep_from_env(explicit: "int | None" = None) -> int:
+    """Resolve the decode-megastep length N: an explicit engine argument
+    wins, then the ``PARALLAX_MEGASTEP`` env var, then the default
+    (megastep ON with a safe N).  ``1`` selects the per-iteration path
+    exactly as it was before megasteps existed."""
+    if explicit is not None:
+        n = explicit
+    else:
+        raw = os.environ.get(MEGASTEP_ENV)
+        if raw is None:
+            return MEGASTEP_DEFAULT
+        try:
+            n = int(raw)
+        except ValueError:
+            raise ValueError(
+                f"{MEGASTEP_ENV}={raw!r}: expected an integer "
+                f"megastep length (1 disables fusion)") from None
+    if n < 1:
+        raise ValueError(f"megastep length must be >= 1, got {n}")
+    return n
+
 
 @dataclass
 class Request:
     id: int
     prompt: "np.ndarray"           # (S,) int32
     max_new_tokens: int = 16
+    eos_id: "int | None" = None    # stop after sampling this token
 
     def context_len(self) -> int:
         return len(self.prompt) + self.max_new_tokens
@@ -72,6 +99,7 @@ class Completion:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     ttft_s: float = 0.0            # run-start -> first generated token
+    ttft_admit_s: float = 0.0      # admission -> first generated token
 
 
 def _pad_to_multiple(arr: "np.ndarray", multiple: int) -> "np.ndarray":
@@ -152,7 +180,8 @@ class ServingEngine:
         self.queue = [r for r in self.queue if r.id not in chosen_ids]
         return chosen
 
-    def _run_round(self, batch_reqs, t_run0: float) -> None:
+    def _run_round(self, batch_reqs, t_run0: float,
+                   t_admit: "float | None" = None) -> None:
         """One round over a fixed ``max_batch``-wide batch: rounds with
         fewer admitted requests pad with inactive rows (n_valid = 0,
         never active), so every dispatch has one shape — one trace for
@@ -194,16 +223,26 @@ class ServingEngine:
                 first_tok[done_here] = first_host[done_here]
             lens += n_valid
         prefill_s = time.perf_counter() - t0
-        ttft_s = time.perf_counter() - t_run0
+        t_first = time.perf_counter()
+        ttft_s = t_first - t_run0
+        ttft_admit_s = t_first - (t_admit if t_admit is not None
+                                  else t_run0)
 
         comps = {r.id: Completion(r.id, prefill_s=prefill_s,
-                                  ttft_s=ttft_s)
+                                  ttft_s=ttft_s,
+                                  ttft_admit_s=ttft_admit_s)
                  for r in batch_reqs}
+        eos = np.full(B, -1, np.int64)
+        for i, r in enumerate(batch_reqs):
+            if r.eos_id is not None:
+                eos[i] = r.eos_id
         count = np.zeros(B, np.int32)       # pad rows stay at 0
         for i, r in enumerate(batch_reqs):
             if r.max_new_tokens > 0:        # 0 = prefill-only request
                 comps[r.id].tokens.append(int(first_tok[i]))
                 count[i] = 1
+                if first_tok[i] == eos[i]:  # stop after the EOS token
+                    count[i] = max_new[i]
         last = first_tok.copy()
 
         t0 = time.perf_counter()
@@ -218,6 +257,8 @@ class ServingEngine:
             for i, r in enumerate(batch_reqs):
                 if active[i]:
                     comps[r.id].tokens.append(int(last[i]))
+                    if last[i] == eos[i]:
+                        count[i] = max_new[i]
         decode_s = time.perf_counter() - t0
 
         for r in batch_reqs:
@@ -241,9 +282,10 @@ class ServingEngine:
                 raise MemoryError(
                     f"no queued request fits: smallest peak {smallest} "
                     f"bytes, headroom {self.kv.budget - self.kv.in_use}")
+            t_admit = time.perf_counter()
             for r in batch_reqs:
                 self.kv.admit(r.id, r.context_len())
-            self._run_round(batch_reqs, t_run0)
+            self._run_round(batch_reqs, t_run0, t_admit)
         return self.completed
 
 
@@ -258,6 +300,8 @@ class _Seq:
     req: Request
     gen: "list[int]" = field(default_factory=list)
     ttft_s: "float | None" = None
+    ttft_admit_s: "float | None" = None
+    admit_t: "float | None" = None     # first admission (pre-preemption)
     preempted: bool = False
 
     def pending_len(self) -> int:
@@ -289,6 +333,25 @@ class ContinuousEngine:
     slot.  Caches are allocated once; the step functions trace exactly
     once for the whole run.
 
+    **Decode megastep** (``megastep`` / env ``PARALLAX_MEGASTEP``,
+    default 8): instead of one decode dispatch per
+    iteration, up to N consecutive decode iterations compile into ONE
+    ``lax.scan`` dispatch whose carry holds (token ids, per-row
+    cache_len, active mask, sampling state) entirely on device — greedy
+    sampling, EOS checks and max-token countdown run in-carry, so
+    finished rows self-deactivate mid-megastep without a host sync, and
+    prefilling rows ride by force-feeding their remaining prompt
+    tokens.  The engine **bulk-reserves** every KV block the scan could
+    write before launching (the scan never allocates), **flushes** with
+    a short megastep whenever requests wait (N clips to the next slot
+    completion, bounding TTFT inflation), fences off a demoted
+    request's re-admission headroom from the reservation, and
+    **reconciles** after the single host transfer: streams truncate at
+    EOS, reserved-but-unused blocks return to the pool, admission and
+    preemption re-run.  ``megastep=1`` is the per-iteration engine,
+    bit-identical streams by construction; N >= 2 preserves them
+    because each scan step runs the very same per-row computation.
+
     ``paged=True`` (default) stores KV in ONE physical block pool per
     layer — ``BlockKVCache`` slab ids index the pool rows, and the
     engine ships a ``(max_batch, blocks_per_seq)`` block table with
@@ -306,7 +369,8 @@ class ContinuousEngine:
                  prefill_chunk: int = 16, block_size: int = 16,
                  max_context: int = 64,
                  stepper: "Stepper | None" = None,
-                 paged: bool = True, prefix_sharing: bool = True):
+                 paged: bool = True, prefix_sharing: bool = True,
+                 megastep: "int | None" = None):
         if api.cfg.is_encoder_decoder:
             raise ValueError("ContinuousEngine serves decoder-only "
                              "models (encoder-decoder needs an encoder "
@@ -368,6 +432,17 @@ class ContinuousEngine:
         self.iterations = 0
         self._admit_counter = 0
         self._t0: "float | None" = None
+        # decode megastep: N fused iterations per dispatch (1 = the
+        # per-iteration path; env PARALLAX_MEGASTEP overrides default)
+        self.megastep_n = megastep_from_env(megastep)
+        self.megasteps = 0              # fused dispatches launched
+        self.megastep_steps = 0         # iterations fused into them
+        # slot-reset dispatches only exist to clear per-row state that
+        # attention masking cannot neutralize (SSM state, conv windows).
+        # Attention-only models read nothing but positions t <= cache_len
+        # — all freshly written by the new tenant — so the reset dispatch
+        # is skipped entirely (one dispatch saved per admission wave).
+        self._needs_reset = self.kv.state_bytes > 0
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) == 0:
@@ -441,8 +516,9 @@ class ContinuousEngine:
                                  if s.req.id not in chosen_set)
         if not fresh.any():
             return 0
-        self.dispatch_count += 1
-        self.caches = self.stepper.reset_rows(self.caches, fresh)
+        if self._needs_reset:
+            self.dispatch_count += 1
+            self.caches = self.stepper.reset_rows(self.caches, fresh)
         return int(fresh.sum())
 
     def _place(self, slot: int, seq: "_Seq", fresh: "np.ndarray") -> None:
@@ -452,6 +528,8 @@ class ContinuousEngine:
             tokens=prompt if self.prefix_sharing else None)
         self.slots[slot] = seq
         self._slot_prompt[slot] = prompt
+        if seq.admit_t is None:           # re-admissions keep the first
+            seq.admit_t = time.perf_counter()
         self.slot_phase[slot] = PREFILL
         # a shared prefix is already IN the cache (written by the
         # request that published it, bit-identically — same tokens, same
@@ -533,8 +611,11 @@ class ContinuousEngine:
         tok = get_first_tok()
         seq.gen.append(tok)
         self.slot_last[slot] = tok
-        seq.ttft_s = time.perf_counter() - self._t0
-        if len(seq.gen) >= seq.req.max_new_tokens:
+        now = time.perf_counter()
+        seq.ttft_s = now - self._t0
+        seq.ttft_admit_s = now - seq.admit_t
+        if len(seq.gen) >= seq.req.max_new_tokens \
+                or tok == seq.req.eos_id:
             self._finish(slot)
 
     def _grow_or_preempt(self) -> None:
@@ -612,8 +693,183 @@ class ContinuousEngine:
             tok = int(nxt_host[s])
             seq.gen.append(tok)
             self.slot_last[s] = tok
-            if len(seq.gen) >= seq.req.max_new_tokens:
+            if len(seq.gen) >= seq.req.max_new_tokens \
+                    or tok == seq.req.eos_id:
                 self._finish(int(s))
+
+    # -- decode megastep: reserve -> scan -> reconcile ----------------------
+
+    def _row_plan(self, slot: int) -> "tuple[int, int]":
+        """(steps_budget, n_forced) of an occupied slot.
+
+        ``steps_budget`` is the number of decode iterations the row can
+        execute before it terminates on its own (max-token; EOS can only
+        shorten it in-scan), ``n_forced`` the tokens it must force-feed
+        before its input comes from the sampled carry (remaining pending
+        prompt, plus the already-sampled last token of a resumed
+        request)."""
+        seq = self.slots[slot]
+        m_rem = seq.req.max_new_tokens - len(seq.gen)
+        if self.slot_phase[slot] == PREFILL:
+            prem = len(self._slot_prompt[slot]) - int(self.slot_off[slot])
+            n_forced = prem + (1 if seq.gen else 0)
+            budget = n_forced + m_rem - 1 if m_rem > 0 else n_forced
+        else:
+            n_forced = 0
+            budget = m_rem
+        return budget, n_forced
+
+    def _plan_megastep(self) -> "tuple[int, dict]":
+        """Choose the megastep length N and bulk-reserve every KV block
+        the scan could write; returns ``(N, row plans)`` — the per-slot
+        ``_row_plan`` tuples the launch must use, so reservation sizing
+        and the scan's forced/budget arrays can never desynchronize —
+        or ``(0, {})`` when the per-iteration path should run instead
+        (N < 2, or the pool cannot back even a 2-step scan without
+        preempting).
+
+        Two caps keep the fusion honest:
+
+        * **flush** — while requests wait, N is clipped to the smallest
+          active row's remaining budget, so the megastep ends exactly
+          when the first slot frees and admission runs: waiting
+          requests never sit behind a full-length megastep (TTFT).
+        * **re-admission headroom** — a demote-only-preempted request
+          re-admits with priority the moment its pending cache fits;
+          megastep reservations must not consume that headroom, so the
+          head demoted request's need is fenced off before sizing N.
+        """
+        occupied = [s for s in range(self.max_batch)
+                    if self.slot_phase[s] != FREE]
+        if not occupied or self.megastep_n < 2:
+            return 0, {}
+        plans = {s: self._row_plan(s) for s in occupied}
+        budgets = {s: plans[s][0] for s in occupied}
+        n = min(self.megastep_n, max(budgets.values()))
+        if self.waiting:
+            n = min(n, min(budgets.values()))
+        if n < 2:
+            return 0, {}
+        if self.kv.block_bytes:
+            reserve = 0
+            head = next((q for q in self.waiting if q.preempted), None)
+            if head is not None:
+                reserve = self.kv.bytes_for(head.pending_len())
+
+            def extra_bytes(n_try: int) -> int:
+                need = 0
+                for s in occupied:
+                    cover = int(self.slot_len[s]) + min(n_try, budgets[s])
+                    extra = self.kv.blocks_for(cover) \
+                        - len(self.kv.block_tables[s])
+                    need += max(extra, 0) * self.kv.block_bytes
+                return need
+
+            while n >= 2:
+                need = extra_bytes(n)
+                if need == 0 or need <= self.kv.headroom - reserve:
+                    break
+                n -= 1
+            if n < 2:
+                return 0, {}
+            for s in occupied:
+                cover = int(self.slot_len[s]) + min(n, budgets[s])
+                grew = self.kv.grow(s, cover)
+                assert grew, "megastep reservation exceeded headroom"
+                self._refresh_table(s)
+        return n, plans
+
+    def _megastep(self, n: int, plans: dict) -> None:
+        """ONE dispatch advances every occupied slot by up to ``n``
+        iterations: a ``lax.scan`` twin of :meth:`_decode` carries
+        (caches, sampled token, per-row cache_len, active mask, step
+        budget) on device — greedy sampling, EOS and max-token
+        termination all happen in-carry, so finished rows deactivate
+        and stop writing mid-scan without a host sync.  Prefilling rows
+        ride the scan by force-feeding their remaining prompt tokens
+        (and a resumed request's already-sampled last token) from a
+        host-built (B, n) column set.  After the single host transfer,
+        reconciliation replays the bookkeeping: streams are extended
+        (truncated past EOS), TTFTs stamped post-reconciliation,
+        reserved-but-unused blocks returned to the pool, and finished
+        slots freed so admission sees the true headroom."""
+        B = self.max_batch
+        active = self.slot_phase != FREE
+        prefilling = self.slot_phase == PREFILL
+        budget = np.zeros(B, np.int32)
+        n_forced = np.zeros(B, np.int32)
+        forced = np.zeros((B, n), np.int32)
+        eos_ids = np.full(B, -1, np.int32)
+        for s in np.flatnonzero(active):
+            seq = self.slots[s]
+            budget[s], n_forced[s] = plans[int(s)]
+            if prefilling[s]:
+                pending = self._slot_prompt[s]
+                off = int(self.slot_off[s])
+                take = min(n, len(pending) - off)
+                forced[s, :take] = pending[off:off + take]
+                if seq.gen and take < n:      # resumed: re-feed last tok
+                    forced[s, take] = seq.gen[-1]
+            if seq.req.eos_id is not None:
+                eos_ids[s] = seq.req.eos_id
+            self.kv.check_write(
+                int(s), int(self.slot_len[s]),
+                int(self.slot_len[s]) + min(n, int(budget[s])))
+        self.dispatch_count += 1
+        self.megasteps += 1
+        toks_dev, act_dev, self.caches = self.stepper.megastep(
+            self.params, self.caches, self.slot_last, self.slot_len,
+            active, budget, forced, n_forced, eos_ids,
+            block_tables=self.tables)
+        toks_out = np.asarray(toks_dev)       # (n, B) — the ONE sync
+        act_out = np.asarray(act_dev)
+        now = time.perf_counter()             # post-reconciliation stamp
+        steps = act_out.sum(axis=0).astype(np.int32)
+        self.megastep_steps += int(steps.max())
+        self.slot_len += steps
+        for s in np.flatnonzero(active):
+            s = int(s)
+            seq = self.slots[s]
+            st = int(steps[s])
+            gen_start = 0
+            if prefilling[s]:
+                pending = self._slot_prompt[s]
+                prem = len(pending) - int(self.slot_off[s])
+                self.slot_off[s] += min(st, prem)
+                if self.prefix_sharing:
+                    self.kv.publish(s, pending, int(self.slot_len[s]))
+                gen_start = int(n_forced[s]) - 1
+            new_toks = [int(t) for t in toks_out[gen_start:st, s]] \
+                if seq.req.max_new_tokens > 0 else []
+            fresh_first = prefilling[s] and not seq.gen and new_toks
+            seq.gen.extend(new_toks)
+            if prefilling[s] \
+                    and self.slot_off[s] >= len(self._slot_prompt[s]):
+                self.slot_phase[s] = DECODE
+                if seq.req.max_new_tokens == 0:
+                    self._finish(s)           # prefill-only request
+                    continue
+            if fresh_first:
+                seq.ttft_s = now - self._t0
+                seq.ttft_admit_s = now - seq.admit_t
+            if seq.gen:
+                self.slot_last[s] = seq.gen[-1]
+            # termination applies only once the prompt is consumed — a
+            # still-prefilling row (prompt longer than the megastep)
+            # must keep its slot even when max_new_tokens == 0
+            if self.slot_phase[s] == DECODE and \
+                    (len(seq.gen) >= seq.req.max_new_tokens or
+                     (new_toks and new_toks[-1] == seq.req.eos_id)):
+                self._finish(s)
+                continue
+            # return reserved-but-unused blocks (EOS fired early, or the
+            # row's budget emptied before N); a still-prefilling row
+            # keeps its admitted prompt blocks
+            keep = max(int(self.slot_len[s]),
+                       len(self._slot_prompt[s])
+                       if self.slot_phase[s] == PREFILL else 0)
+            if self.kv.release_to(s, keep):
+                self._refresh_table(s)
 
     def _finish(self, slot: int) -> None:
         """Release the slot's cache blocks the iteration it finishes."""
@@ -626,13 +882,21 @@ class ContinuousEngine:
             self.tables[slot, :] = self.scratch_block
         self.completed[seq.req.id] = Completion(
             seq.req.id, tokens=list(seq.gen),
-            ttft_s=seq.ttft_s if seq.ttft_s is not None else 0.0)
+            ttft_s=seq.ttft_s if seq.ttft_s is not None else 0.0,
+            ttft_admit_s=seq.ttft_admit_s
+            if seq.ttft_admit_s is not None else 0.0)
 
     # -- driver -------------------------------------------------------------
 
     def step(self) -> None:
-        """One scheduling iteration: admit, prefill a chunk, grow/
-        preempt, decode one token per active slot."""
+        """One scheduling iteration: admit, prefill a chunk, then either
+        ONE fused decode megastep (reserve -> scan -> reconcile,
+        advancing every slot by up to ``megastep_n`` tokens) or the
+        per-iteration path (grow/preempt, decode one token per slot).
+        The megastep plan falls back to the per-iteration path whenever
+        fusing is pointless (N < 2) or unsafe (the pool cannot back a
+        2-step scan without preempting — preemption stays a
+        per-iteration-path decision)."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
         self.iterations += 1
@@ -647,8 +911,12 @@ class ContinuousEngine:
             if admitted == 0:
                 return
         self._prefill()
-        self._grow_or_preempt()
-        self._decode()
+        n, plans = self._plan_megastep()
+        if n >= 2:
+            self._megastep(n, plans)
+        else:
+            self._grow_or_preempt()
+            self._decode()
 
     def run(self, max_iters: int = 100_000) -> "dict[int, Completion]":
         self._t0 = time.perf_counter()

@@ -332,9 +332,13 @@ class BlockKVCache:
                     f"registered={slab.id in self._slab_hash})")
 
     def grow(self, slot: int, n_tokens: int) -> bool:
-        """Extend the slot's block table to cover ``n_tokens`` positions.
+        """Extend the slot's block table to cover ``n_tokens`` positions
+        — the *bulk reserve* half of the megastep protocol: the engine
+        reserves every block an N-step decode megastep could write
+        BEFORE launching the scan (which itself can never allocate).
         Returns False (allocating nothing) when the pool lacks headroom —
-        the engine then preempts and retries."""
+        the engine then preempts and retries, or launches a shorter
+        megastep."""
         table = self.block_tables[slot]
         extra = self.blocks_for(n_tokens) - len(table)
         if extra <= 0:
@@ -344,6 +348,31 @@ class BlockKVCache:
         table.extend(self._acquire_block() for _ in range(extra))
         self._peak = max(self._peak, self.in_use)
         return True
+
+    def release_to(self, slot: int, n_tokens: int) -> int:
+        """Return the slot's blocks beyond ``blocks_for(n_tokens)`` to
+        the pool — the *bulk release* half of the megastep protocol:
+        after the scan returns, blocks reserved for steps a row never
+        took (EOS fired early, budget emptied mid-scan) go straight back
+        so the next admission/growth sees the true headroom.  Reserved
+        blocks are trailing, private (refcount 1) and unregistered by
+        construction — prefix-shared blocks live strictly below every
+        write position and are never reserved.  Returns the number of
+        blocks released."""
+        if not self.block_bytes:
+            return 0
+        table = self.block_tables[slot]
+        keep = self.blocks_for(n_tokens)
+        freed = 0
+        while len(table) > keep:
+            slab = table.pop()
+            assert self._ref[slab.id] == 1 \
+                and slab.id not in self._slab_hash, \
+                f"reserved block {slab.id} became shared"
+            del self._ref[slab.id]
+            self.pool.release(slab)
+            freed += 1
+        return freed
 
     def free(self, slot: int) -> None:
         """Drop the slot's reference on every block (+ release the state

@@ -42,6 +42,39 @@ def select_tokens(logits, active, fallback):
                      fallback.astype(jnp.int32))
 
 
+def megastep_advance(logits, last, active, budget, n_forced, eos_ids,
+                     step):
+    """One megastep iteration's on-device sampling-state update.
+
+    The decode megastep (``Stepper.megastep``) fuses N decode iterations
+    into one ``lax.scan`` dispatch, so the per-token host logic — greedy
+    selection, EOS checks, max-token countdown — moves in-trace.  All
+    arguments are (B,) except ``step`` (the scalar scan index):
+
+    * ``last`` — previous sampled token (the carry's sampling state),
+    * ``active`` — rows that executed THIS step (wrote their cache),
+    * ``budget`` — steps the row may still take (max-token countdown,
+      precomputed on host; EOS can only shorten it),
+    * ``n_forced`` — prompt tokens the row is force-feeding: steps below
+      ``n_forced - 1`` emit mid-prompt argmaxes that never enter the
+      stream, so they must not trigger EOS,
+    * ``eos_ids`` — per-row EOS token id, ``-1`` for none.
+
+    Returns ``(nxt, active_next, budget_next)``.  ``nxt`` is the
+    bf16-quantized greedy token (bit-identical to the per-iteration
+    engine's :func:`select_tokens`); a row deactivates the step after
+    its budget empties or it samples its EOS on a stream-token step, so
+    finished rows stop writing their caches mid-megastep without a host
+    sync.
+    """
+    nxt = select_tokens(logits, active, last)
+    is_gen = step >= n_forced - 1
+    eos_hit = active & is_gen & (eos_ids >= 0) & (nxt == eos_ids)
+    budget_next = budget - active.astype(jnp.int32)
+    active_next = active & (budget_next > 0) & jnp.logical_not(eos_hit)
+    return nxt, active_next, budget_next
+
+
 def sample(logits, key, temperature: float = 1.0, top_k: int = 0):
     """Temperature / top-k sampling.  (B, V) -> (B,)."""
     if temperature <= 0.0:

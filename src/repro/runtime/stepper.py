@@ -13,6 +13,17 @@ One :class:`Stepper` owns exactly two jitted callables per batch shape:
   one trace per batch shape.  The logits at each row's *last* valid step
   are captured in-carry and argmax'd, yielding the first generated token
   without materializing per-position logits.
+* ``megastep`` — N fused decode iterations as ONE dispatch: an in-trace
+  ``lax.scan`` whose carry is (caches, last sampled token, per-row
+  ``cache_len``, ``active`` mask, step budget).  Greedy sampling, EOS
+  checks and max-token countdown run on device
+  (:func:`~repro.runtime.sampling.megastep_advance`), so finished rows
+  self-deactivate mid-scan and stop writing their caches; rows still
+  holding prompt tokens force-feed them from a host-built ``forced``
+  column instead of the sampled carry.  The engine pre-reserves every
+  block the scan could write before launching, so the scan never
+  allocates (see ``ContinuousEngine._plan_megastep``).  Each distinct N
+  is a distinct trace (``megastep_sizes``); a given N never retraces.
 
 Trace counters are incremented inside the traced Python bodies (which
 run only at trace time), so ``chunk_traces`` / ``decode_traces`` observe
@@ -25,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .sampling import greedy_serving, select_tokens
+from .sampling import greedy_serving, megastep_advance, select_tokens
 
 
 def _device(x, dtype):
@@ -54,11 +65,19 @@ class Stepper:
         self.decode_traces = 0
         self.paged_chunk_traces = 0
         self.paged_decode_traces = 0
+        self.megastep_traces = 0
+        self.paged_megastep_traces = 0
+        # distinct megastep lengths traced, per flavor: a (flavor, N)
+        # re-appearing would mean a RE-trace (tests assert counters ==
+        # set sizes, i.e. one trace per distinct scan length)
+        self.megastep_sizes: "set[tuple[bool, int]]" = set()
         self.dispatches = 0
         self._decode = jax.jit(self._make_decode(paged=False))
         self._chunk = jax.jit(self._make_chunk(paged=False))
         self._decode_paged = jax.jit(self._make_decode(paged=True))
         self._chunk_paged = jax.jit(self._make_chunk(paged=True))
+        self._mega = jax.jit(self._make_megastep(paged=False))
+        self._mega_paged = jax.jit(self._make_megastep(paged=True))
         self._reset = jax.jit(self._make_reset())
 
     # -- decode -------------------------------------------------------------
@@ -147,6 +166,69 @@ class Stepper:
                                  _device(lens, jnp.int32),
                                  _device(n_valid, jnp.int32),
                                  _device(block_tables, jnp.int32))
+
+    # -- decode megastep ----------------------------------------------------
+
+    def _make_megastep(self, paged: bool):
+        decode = self.api.decode_fn
+
+        def run(params, caches, toks, lens, active, budget, forced,
+                n_forced, eos_ids, tables=None):
+            if paged:                        # trace-time side effects
+                self.paged_megastep_traces += 1
+            else:
+                self.megastep_traces += 1
+            self.megastep_sizes.add((paged, forced.shape[1]))
+            N = forced.shape[1]
+
+            def body(carry, xs):
+                caches, last, lens, active, budget = carry
+                f_col, s = xs
+                # rows still consuming prompt (or a resumed request's
+                # re-fed last token) take the forced column; everyone
+                # else feeds back the sampled carry
+                tok_in = jnp.where(s < n_forced, f_col, last)
+                batch = {"tokens": tok_in[:, None], "cache_len": lens,
+                         "active": active}
+                if tables is not None:
+                    batch["block_tables"] = tables
+                logits, caches = decode(params, caches, batch)
+                nxt, nactive, budget = megastep_advance(
+                    logits, last, active, budget, n_forced, eos_ids, s)
+                lens = lens + active.astype(jnp.int32)
+                # emit the pre-update mask: which rows EXECUTED this
+                # step (wrote their cache and, on gen steps, a token)
+                return (caches, nxt, lens, nactive, budget), (nxt, active)
+
+            (caches, _, _, _, _), (toks_out, act_out) = jax.lax.scan(
+                body, (caches, toks, lens, active, budget),
+                (jnp.swapaxes(forced, 0, 1),
+                 jnp.arange(N, dtype=jnp.int32)))
+            return toks_out, act_out, caches
+
+        return run
+
+    def megastep(self, params, caches, toks, lens, active, budget,
+                 forced, n_forced, eos_ids, block_tables=None):
+        """N fused decode iterations, ONE dispatch, ONE host sync.
+
+        toks/lens/active/budget/n_forced/eos_ids (B,); forced (B, N)
+        prompt tokens to force-feed (row b uses column s while
+        ``s < n_forced[b]``).  Returns ``(toks_out (N, B), act_out
+        (N, B), new caches)`` — ``act_out[s]`` is the mask of rows that
+        executed scan step ``s``; the token stream of row b is
+        ``toks_out[n_forced[b]-1 : steps_taken, b]``.  The caller must
+        have reserved cache blocks for every position the scan can
+        write: the scan itself never allocates.
+        """
+        self.dispatches += 1
+        args = (params, caches, _device(toks, jnp.int32),
+                _device(lens, jnp.int32), _device(active, bool),
+                _device(budget, jnp.int32), _device(forced, jnp.int32),
+                _device(n_forced, jnp.int32), _device(eos_ids, jnp.int32))
+        if block_tables is None:
+            return self._mega(*args)
+        return self._mega_paged(*args, _device(block_tables, jnp.int32))
 
     # -- slot reset ---------------------------------------------------------
 

@@ -10,7 +10,14 @@ runs in this dedicated child instead of the pytest process — see
 runtime/engine.py for the full determinism contract.
 
 Usage: python serving_identity_child.py <arch> [<arch> ...]
+       python serving_identity_child.py --fuzz <arch> [<arch> ...]
 Prints one JSON object {arch: {...checks...}} on the last stdout line.
+
+``--fuzz`` runs the megastep termination fuzz instead of the identity
+matrix: rows hitting max-token or EOS at EVERY offset within the
+megastep must produce streams bit-identical to the per-iteration
+(N=1) engine, with every reserved-but-unused block returned to the
+pool (see tests/test_megastep.py, which drives this mode).
 """
 
 import json
@@ -18,6 +25,11 @@ import os
 import sys
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# pin the default-megastep engines to the shipped default: the checks
+# below assert fused dispatches actually happen (megasteps_used > 0),
+# which an ambient PARALLAX_MEGASTEP=1 in a developer's shell would
+# otherwise break spuriously; explicit megastep arguments still win
+os.environ["PARALLAX_MEGASTEP"] = "8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
@@ -28,8 +40,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.runtime.engine import (ContinuousEngine, Request,
-                                  ServingEngine)
+from repro.runtime.engine import (FREE, PREFILL, ContinuousEngine,
+                                  Request, ServingEngine)
 from repro.runtime.stepper import Stepper
 
 MAX_CONTEXT = 32
@@ -54,7 +66,7 @@ def run_arch(arch: str) -> dict:
     shared = Stepper(api)
 
     def fresh(r):
-        return Request(r.id, r.prompt, r.max_new_tokens)
+        return Request(r.id, r.prompt, r.max_new_tokens, r.eos_id)
 
     r_eng = ServingEngine(api, params, hbm_budget_bytes=1 << 30,
                           max_batch=MAX_BATCH, max_context=MAX_CONTEXT,
@@ -124,10 +136,51 @@ def run_arch(arch: str) -> dict:
     out["isolation"] = solo.run()[reqs[-1].id].tokens \
         == cd[reqs[-1].id].tokens
 
+    # megastep invariance: the default engines above already ran fused
+    # (N=8); N=1 (per-iteration path, exercising the plain decode twin)
+    # and N=4 must emit the same bits
+    mega_ok = True
+    for m in (1, 4):
+        eng = ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
+                               max_batch=MAX_BATCH, block_size=BLOCK,
+                               max_context=MAX_CONTEXT, stepper=shared,
+                               megastep=m)
+        for r in reqs:
+            eng.submit(fresh(r))
+        ed = eng.run()
+        mega_ok &= all(ed[r.id].tokens == cd[r.id].tokens for r in reqs)
+    out["megastep_invariant"] = mega_ok
+    out["megasteps_used"] = c_eng.megasteps
+
+    # EOS termination inside a megastep: pick a mid-stream token of the
+    # longest stream as the EOS id — N=8 must truncate exactly like N=1
+    longest = max(reqs, key=lambda r: len(cd[r.id].tokens))
+    stream = cd[longest.id].tokens
+    eos_tok = stream[len(stream) // 2]
+    eos_streams = []
+    for m in (1, 8):
+        eng = ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
+                               max_batch=MAX_BATCH, block_size=BLOCK,
+                               max_context=MAX_CONTEXT, stepper=shared,
+                               megastep=m)
+        for r in reqs:
+            eng.submit(Request(r.id, r.prompt, r.max_new_tokens,
+                               eos_id=eos_tok))
+        ed = eng.run()
+        eos_streams.append({r.id: ed[r.id].tokens for r in reqs})
+    out["eos_identical"] = eos_streams[0] == eos_streams[1]
+    out["eos_truncated"] = (
+        eos_streams[0][longest.id]
+        == stream[:stream.index(eos_tok) + 1])
+
     # ALL paged engines above share one pool shape: ONE paged decode
-    # trace + ONE paged chunk trace for the whole matrix
+    # trace + ONE paged chunk trace for the whole matrix; the megastep
+    # traces once per DISTINCT scan length and never re-traces
     out["single_paged_decode_trace"] = shared.paged_decode_traces == 1
     out["single_paged_chunk_trace"] = shared.paged_chunk_traces == 1
+    out["megastep_no_retrace"] = (
+        shared.megastep_traces + shared.paged_megastep_traces
+        == len(shared.megastep_sizes))
 
     # prefix sharing (attention-only archs): staggered lifetimes so
     # later admissions overlap live holders of the same prompt prefix —
@@ -206,5 +259,100 @@ def run_arch(arch: str) -> dict:
     return out
 
 
+class _AuditEngine(ContinuousEngine):
+    """Asserts after every iteration that no slot retains reserved-but-
+    unused blocks: a surviving slot's table covers exactly its written
+    tokens (or its admitted pending prompt while still prefilling).
+    Also asserts no request finishes with prompt tokens unconsumed
+    (a megastep must never terminate a still-prefilling row — the
+    prefill-only regression streams alone cannot reveal)."""
+
+    def _finish(self, slot):
+        assert self.slot_off[slot] == len(self._slot_prompt[slot]), \
+            (slot, int(self.slot_off[slot]),
+             len(self._slot_prompt[slot]))
+        super()._finish(slot)
+
+    def step(self):
+        super().step()
+        if not self.kv.block_bytes:
+            return
+        for s in range(self.max_batch):
+            if self.slot_phase[s] == FREE:
+                continue
+            need = int(self.slot_len[s])
+            if self.slot_phase[s] == PREFILL:
+                need = max(need, len(self._slot_prompt[s]))
+            held = len(self.kv.block_tables[s])
+            assert held == self.kv.blocks_for(max(need, 1)), \
+                (s, held, need)
+
+
+def run_fuzz(arch: str, seed: int = 0) -> dict:
+    """Megastep termination fuzz: seeded random workloads where rows hit
+    max-token or EOS at every offset within N — streams must match the
+    per-iteration engine bit for bit, reserved-but-unused blocks must
+    return to the pool every iteration, and the pool high-water of the
+    fused engine may exceed N=1's by at most the bulk reservation bound
+    (N-1 extra blocks per slot)."""
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    shared = Stepper(api)
+    rng = np.random.default_rng(seed)
+    checks = {"cases": 0, "identical": True, "drained": True,
+              "highwater_bounded": True}
+
+    def run(reqs, megastep, budget=1 << 30):
+        eng = _AuditEngine(api, params, hbm_budget_bytes=budget,
+                           max_batch=MAX_BATCH, block_size=BLOCK,
+                           max_context=MAX_CONTEXT, stepper=shared,
+                           megastep=megastep)
+        for r in reqs:
+            eng.submit(Request(r.id, r.prompt, r.max_new_tokens,
+                               eos_id=r.eos_id))
+        done = eng.run()
+        return {r.id: done[r.id].tokens for r in reqs}, eng
+
+    for case in range(8):
+        n = int(rng.integers(2, 9))
+        # max-token terminations at every offset 1..n+1 within/around
+        # one megastep, mixed prompt lengths
+        reqs = [Request(i,
+                        rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(1, 12)))
+                        .astype(np.int32),
+                        max_new_tokens=1 + (i + case) % (n + 1))
+                for i in range(6)]
+        # a prefill-only request whose prompt outlives one megastep:
+        # it must NOT terminate before its prompt is fully consumed
+        reqs.append(Request(6, rng.integers(0, cfg.vocab_size, n + 3)
+                            .astype(np.int32), max_new_tokens=0))
+        base, e1 = run(reqs, 1)
+        fused, e8 = run(reqs, n)
+        checks["cases"] += 1
+        checks["identical"] &= base == fused
+        checks["drained"] &= e8.kv.in_use == 0
+        if e8.kv.block_bytes:
+            bound = e1.kv.peak_bytes \
+                + MAX_BATCH * (n - 1) * e8.kv.block_bytes
+            checks["highwater_bounded"] &= e8.kv.peak_bytes <= bound
+        # EOS at every offset of the longest stream
+        longest = max(base, key=lambda i: len(base[i]))
+        for off, tok in enumerate(base[longest]):
+            er = [Request(r.id, r.prompt, r.max_new_tokens,
+                          eos_id=int(tok)) for r in reqs]
+            b, _ = run(er, 1)
+            f, e = run(er, n)
+            checks["cases"] += 1
+            checks["identical"] &= b == f
+            checks["drained"] &= e.kv.in_use == 0
+    return checks
+
+
 if __name__ == "__main__":
-    print(json.dumps({arch: run_arch(arch) for arch in sys.argv[1:]}))
+    args = sys.argv[1:]
+    if args and args[0] == "--fuzz":
+        print(json.dumps({arch: run_fuzz(arch) for arch in args[1:]}))
+    else:
+        print(json.dumps({arch: run_arch(arch) for arch in args}))

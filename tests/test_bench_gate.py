@@ -12,9 +12,13 @@ from benchmarks.gate import gate  # noqa: E402
 
 BASE = {
     "workload": {"requests": 9, "max_batch": 4, "block_size": 4,
-                 "max_context": 32, "seed": 0},
+                 "max_context": 32, "seed": 0, "megastep": 8},
     "round": {"dispatches_per_token": 0.68, "tok_per_s": 100.0},
-    "continuous": {"dispatches_per_token": 0.39, "tok_per_s": 170.0},
+    "continuous": {"dispatches_per_token": 0.13, "tok_per_s": 170.0},
+    "megastep": {"n1": {"dispatches_per_token": 0.39},
+                 "n4": {"dispatches_per_token": 0.17},
+                 "n8": {"dispatches_per_token": 0.13},
+                 "identical_across_n": True},
     "shared_prefix": {"dispatches_per_token": 0.5,
                       "prompt_blocks_acquired": 26,
                       "sharing_engaged": True},
@@ -26,7 +30,7 @@ BASE = {
 def test_gate_passes_identical_and_improved():
     assert gate(BASE, copy.deepcopy(BASE), 0.15) == []
     better = copy.deepcopy(BASE)
-    better["continuous"]["dispatches_per_token"] = 0.2
+    better["continuous"]["dispatches_per_token"] = 0.1
     better["speedup_tok_per_s"] = 3.0
     better["shared_prefix"]["prompt_blocks_acquired"] = 10
     assert gate(BASE, better, 0.15) == []
@@ -34,7 +38,7 @@ def test_gate_passes_identical_and_improved():
 
 def test_gate_tolerates_noise_within_thresholds():
     noisy = copy.deepcopy(BASE)
-    noisy["continuous"]["dispatches_per_token"] = 0.43   # +10%
+    noisy["continuous"]["dispatches_per_token"] = 0.143  # +10%
     noisy["speedup_tok_per_s"] = 1.2                     # -29%
     assert gate(BASE, noisy, 0.15) == []
 
@@ -61,6 +65,32 @@ def test_gate_fails_on_missing_metric():
     bad = copy.deepcopy(BASE)
     del bad["shared_prefix"]
     assert gate(BASE, bad, 0.15)
+
+
+def test_gate_fails_megastep_regressions():
+    """The megastep sweep is gated both against the baseline (per-N
+    dispatches/token) and structurally within the fresh report (N=8
+    must keep >= 2x reduction over its own N=1; streams identical
+    across N)."""
+    bad = copy.deepcopy(BASE)
+    bad["megastep"]["n8"]["dispatches_per_token"] = 0.13 * 1.3
+    out = gate(BASE, bad, 0.15)
+    assert any("megastep N=8" in v for v in out)
+
+    fused_lost = copy.deepcopy(BASE)
+    fused_lost["megastep"]["n8"]["dispatches_per_token"] = 0.3
+    fused_lost["megastep"]["n1"]["dispatches_per_token"] = 0.39
+    out = gate(BASE, fused_lost, 0.15)
+    assert any("fusion" in v for v in out)
+
+    diverged = copy.deepcopy(BASE)
+    diverged["megastep"]["identical_across_n"] = False
+    out = gate(BASE, diverged, 0.15)
+    assert any("identical across N" in v for v in out)
+
+    missing = copy.deepcopy(BASE)
+    del missing["megastep"]
+    assert any("megastep" in v for v in gate(BASE, missing, 0.15))
 
 
 def test_gate_rejects_workload_mismatch():

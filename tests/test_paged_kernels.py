@@ -188,6 +188,78 @@ def test_paged_append_then_decode_roundtrip():
                                rtol=2e-5, atol=2e-5)
 
 
+def test_paged_append_decode_under_scan():
+    """Megastep usage: append + decode fused inside ONE ``lax.scan``
+    with (pools, lens, active) as the carry — N decode iterations, one
+    dispatch.  Each step writes the new token through ``paged_append``
+    at the carry's advancing per-row position (inactive rows steered to
+    the scratch block via ``n_valid=0``) and reads it back through
+    ``paged_decode_attention``; results must match the per-step
+    reference applied sequentially on host."""
+    from repro.kernels.paged_attention.paged_attention import (
+        paged_append, paged_decode_attention)
+
+    rng = np.random.default_rng(13)
+    key = jax.random.key(14)
+    B, H, K, D, bs, bpr, N = 2, 4, 2, 16, 4, 4, 5
+    num_blocks = B * bpr
+    tables = jnp.asarray(_scrambled_tables(rng, B, bpr, num_blocks))
+    k_toks = _rand(jax.random.fold_in(key, 0), (N, B, 1, K, D),
+                   "float32")
+    v_toks = _rand(jax.random.fold_in(key, 1), (N, B, 1, K, D),
+                   "float32")
+    qs = _rand(jax.random.fold_in(key, 2), (N, B, H, D), "float32")
+    lens0 = np.array([3, 7], np.int32)
+    # row 1 deactivates after step 2 (mid-megastep termination)
+    actives = np.ones((N, B), bool)
+    actives[3:, 1] = False
+
+    def body(carry, xs):
+        k_pool, v_pool, lens = carry
+        k_new, v_new, q, active = xs
+        nv = active.astype(jnp.int32)
+        k_pool, v_pool = paged_append(k_pool, v_pool, k_new, v_new,
+                                      tables, lens, nv, interpret=True)
+        out = paged_decode_attention(q, k_pool, v_pool, tables, lens,
+                                     interpret=True)
+        return (k_pool, v_pool, lens + nv), out
+
+    k_pool = jnp.zeros((num_blocks + 1, bs, K, D), jnp.float32)
+    v_pool = jnp.zeros_like(k_pool)
+    # pre-fill the context below lens0 so every position is defined
+    pre_k = _rand(jax.random.fold_in(key, 3), (B, int(lens0.max()),
+                                               K, D), "float32")
+    pre_v = _rand(jax.random.fold_in(key, 4), (B, int(lens0.max()),
+                                               K, D), "float32")
+    k_pool, v_pool = paged_append_op(
+        k_pool, v_pool, pre_k, pre_v, tables, np.zeros(B, np.int32),
+        lens0, interpret=True)
+
+    (k_fin, v_fin, lens_fin), outs = jax.lax.scan(
+        body, (k_pool, v_pool, jnp.asarray(lens0)),
+        (k_toks, v_toks, qs, jnp.asarray(actives)))
+    assert np.array_equal(np.asarray(lens_fin),
+                          lens0 + actives.sum(0))
+
+    # host reference: the same steps applied one by one
+    rk, rv = np.asarray(k_pool), np.asarray(v_pool)
+    lens = lens0.copy()
+    for s in range(N):
+        nv = actives[s].astype(np.int32)
+        rk, rv = paged_append_ref(rk, rv, np.asarray(k_toks[s]),
+                                  np.asarray(v_toks[s]),
+                                  np.asarray(tables), lens, nv)
+        ref = paged_decode_attention_ref(np.asarray(qs[s]), rk, rv,
+                                         np.asarray(tables), lens)
+        np.testing.assert_allclose(np.asarray(outs[s]), ref,
+                                   rtol=2e-5, atol=2e-5)
+        lens += nv
+    np.testing.assert_allclose(np.asarray(k_fin)[:num_blocks],
+                               rk[:num_blocks], rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(v_fin)[:num_blocks],
+                               rv[:num_blocks], rtol=0, atol=0)
+
+
 def test_paged_append_gated_rows_leave_pool_untouched():
     """n_valid = 0 rows must not disturb ANY non-scratch pool row."""
     rng = np.random.default_rng(11)

@@ -124,6 +124,35 @@ def test_single_trace_per_step_fn(identity_report):
         assert identity_report[arch]["single_chunk_trace"], arch
 
 
+def test_megastep_streams_invariant_across_n(identity_report):
+    """The decode megastep is a pure dispatch-fusion optimization: the
+    continuous engine at N in {1, 4, 8} must emit the same bits, with
+    fused dispatches actually used at the default N."""
+    for arch in IDENTITY_ARCHS:
+        r = identity_report[arch]
+        assert r["megastep_invariant"], f"{arch}: megastep changed "\
+            f"streams"
+        assert r["megasteps_used"] > 0, f"{arch}: default engine never "\
+            f"fused"
+
+
+def test_megastep_eos_terminates_in_carry(identity_report):
+    """Per-row EOS flips the active mask inside the scan: streams stop
+    exactly at the EOS token and match the per-iteration engine."""
+    for arch in IDENTITY_ARCHS:
+        r = identity_report[arch]
+        assert r["eos_identical"], f"{arch}: EOS diverged N=8 vs N=1"
+        assert r["eos_truncated"], f"{arch}: stream not cut at EOS"
+
+
+def test_megastep_traces_once_per_scan_length(identity_report):
+    """Each distinct megastep length compiles exactly once; re-tracing
+    an already-seen (flavor, N) would mean the scan signature leaks
+    per-iteration values."""
+    for arch in IDENTITY_ARCHS:
+        assert identity_report[arch]["megastep_no_retrace"], arch
+
+
 # -- round engine: single-trace regression (satellite) -----------------------
 
 def test_round_engine_prefill_single_trace_across_remainders():
