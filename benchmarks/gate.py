@@ -29,6 +29,11 @@ Metrics and how they are compared:
   exceed baseline by more than the threshold.
 * stream identity (``identical_streams``) must not regress from true
   to false.
+* robustness: ``continuous.degraded_activations`` must be present in
+  the fresh report and be exactly 0 — a fault-free benchmark run that
+  trips the NaN watchdog, falls back from a megastep, retries a
+  dispatch or fails a row is a correctness regression, and a report
+  missing the counter would silently un-gate it.
 
 Exit status 0 = within budget, 1 = regression (each violation printed).
 
@@ -123,6 +128,19 @@ def gate(baseline: dict, fresh: dict, threshold: float,
     if _get(baseline, "identical_streams") and \
             not _get(fresh, "identical_streams"):
         bad.append("identical_streams regressed true -> false")
+    # robustness gate: zero degraded-mode activations on a fault-free
+    # run, and the counter itself must exist in the fresh report
+    da = _get(fresh, "continuous.degraded_activations")
+    if da is None:
+        bad.append("continuous.degraded_activations missing from fresh "
+                   "report — robustness counters not reported")
+    elif da != 0:
+        bad.append(
+            f"fault-free run activated degraded mode {da} time(s): "
+            f"watchdog {_get(fresh, 'continuous.watchdog_trips')}, "
+            f"fallbacks {_get(fresh, 'continuous.megastep_fallbacks')}, "
+            f"retries {_get(fresh, 'continuous.retry_dispatches')}, "
+            f"rows failed {_get(fresh, 'continuous.rows_failed')}")
     if _get(baseline, "shared_prefix.sharing_engaged") and \
             not _get(fresh, "shared_prefix.sharing_engaged"):
         bad.append("prefix sharing no longer engaged")

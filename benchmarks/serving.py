@@ -83,6 +83,19 @@ def run_engine(engine, reqs, repeats: int = 1, factory=None):
         t0 = time.perf_counter()
         done = eng.run()
         walls.append(time.perf_counter() - t0)
+        # fault-free contract: every request completes normally, the
+        # degradation ladder never activates, and the pool drains —
+        # any trip here is a robustness regression, not timing noise
+        assert all(c.ok for c in done.values()), \
+            [f"{c.request_id}:{c.status}/{c.reason}"
+             for c in done.values() if not c.ok]
+        if hasattr(eng, "degraded_activations"):
+            assert eng.degraded_activations == 0, \
+                f"fault-free run activated degraded mode: watchdog " \
+                f"{eng.watchdog_trips}, fallbacks " \
+                f"{eng.megastep_fallbacks}, retries " \
+                f"{eng.retry_dispatches}, failed {eng.rows_failed}"
+            eng.assert_quiescent()
         streams = {i: done[i].tokens for i in done}
         if rep == 0:
             streams0, done0, engine0 = streams, done, eng
@@ -238,6 +251,13 @@ def main():
     cont_stats["megastep_n"] = cont.megastep_n
     cont_stats["paged"] = cont.paged
     cont_stats["peak_physical_blocks"] = cont.kv.physical_kv_blocks
+    # degraded-mode counters: all MUST be zero on this fault-free run
+    # (run_engine already asserted it; gate.py regresses on the report)
+    cont_stats["watchdog_trips"] = cont.watchdog_trips
+    cont_stats["megastep_fallbacks"] = cont.megastep_fallbacks
+    cont_stats["retry_dispatches"] = cont.retry_dispatches
+    cont_stats["rows_failed"] = cont.rows_failed
+    cont_stats["degraded_activations"] = cont.degraded_activations
 
     # megastep sweep: dispatches/token at N in {1, 4, 8} on the same
     # workload; every N must emit the same bits (deterministic given the

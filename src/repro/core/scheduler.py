@@ -121,9 +121,17 @@ def incremental_select(peak_mems: "dict[int, int]",
     lifetime maximum — later growth is handled lazily by the block pool.
 
     Returns ``(chosen, deferred)`` exactly like :func:`greedy_select`.
+
+    The effective headroom may be NEGATIVE: a runtime budget shrink
+    (fault plane, co-tenant pressure) can push ``in_use`` past
+    ``budget`` while earlier admissions still hold memory.  That is a
+    valid steady state, not an error — nothing fits until the pool
+    drains or the budget is restored, so everything defers.
     """
     if in_use < 0:
         raise ValueError(f"in_use must be >= 0, got {in_use}")
+    if budget - in_use < 0:
+        return [], sorted(candidates)
     return greedy_select(peak_mems, candidates, budget - in_use,
                          max_parallel, extra_mems=extra_mems)
 

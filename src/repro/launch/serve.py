@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
         --requests 8 --max-new 16 [--budget-mb 256] \
-        [--engine round|continuous] [--megastep N]
+        [--engine round|continuous] [--megastep N] \
+        [--fault-seed S] [--max-queue Q] [--deadline-s D]
 
 ``--engine continuous`` serves through the iteration-level slot-table
 engine on the physically paged block KV cache with cross-request
@@ -15,6 +16,15 @@ per-row termination run on device inside a ``lax.scan``, and the engine
 reserves KV blocks for the whole scan up front, reconciling streams,
 admission and unused blocks afterwards.  ``--megastep 1`` restores the
 per-iteration dispatch path (bit-identical streams either way).
+
+``--fault-seed S`` (or env ``PARALLAX_FAULT_SEED``) arms the
+fault-injection plane (``runtime/faults.py``) with a deterministic
+random schedule — budget shrink/restore, poisoned dispatches, request
+cancellations — and prints the degraded-mode counters afterwards;
+``--max-queue`` bounds admission (rejects carry machine-readable
+reasons) and ``--deadline-s`` attaches a wall-clock deadline to every
+request.  The continuous engine only; the round engine stays the
+unhardened measured baseline.
 """
 
 from __future__ import annotations
@@ -29,21 +39,45 @@ from repro.configs import ARCHS, get_config
 from repro.models import build_model
 from repro.runtime.engine import (ContinuousEngine, Request,
                                   ServingEngine)
+from repro.runtime.faults import FaultPlane, fault_seed_from_env
 
 
 def serve(arch: str, n_requests: int = 8, max_new: int = 16,
           budget_mb: int = 256, prompt_len: int = 12, seed: int = 0,
           max_batch: int = 4, engine_mode: str = "round",
-          paged: bool = True, megastep: "int | None" = None):
+          paged: bool = True, megastep: "int | None" = None,
+          fault_seed: "int | None" = None,
+          max_queue: "int | None" = None,
+          deadline_s: "float | None" = None):
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.key(seed))
+    if fault_seed is None:
+        fault_seed = fault_seed_from_env()
+    if engine_mode != "continuous" and (fault_seed is not None
+                                        or max_queue is not None
+                                        or deadline_s is not None):
+        raise ValueError("fault plane / backpressure / deadlines harden "
+                         "the continuous engine only "
+                         "(--engine continuous)")
+    faults = None
     if engine_mode == "continuous":
         engine = ContinuousEngine(api, params,
                                   hbm_budget_bytes=budget_mb << 20,
                                   max_batch=max_batch,
                                   max_context=prompt_len + max_new,
-                                  paged=paged, megastep=megastep)
+                                  paged=paged, megastep=megastep,
+                                  max_queue=max_queue)
+        if fault_seed is not None:
+            # the schedule's budget events are absolute post-margin
+            # byte values, so derive them from the pool's real budget
+            faults = FaultPlane.random(
+                fault_seed, budget_bytes=engine.kv.budget,
+                request_ids=list(range(n_requests)),
+                max_batch=max_batch)
+            engine.faults = faults
+            print(f"fault plane armed: seed {fault_seed}, "
+                  f"{len(faults.events)} events")
     else:
         engine = ServingEngine(api, params,
                                hbm_budget_bytes=budget_mb << 20,
@@ -54,15 +88,17 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
         engine.submit(Request(
             id=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(
                 np.int32),
-            max_new_tokens=max_new))
+            max_new_tokens=max_new, deadline_s=deadline_s))
     t0 = time.time()
     done = engine.run()
     wall = time.time() - t0
     for rid in sorted(done):
         c = done[rid]
+        tag = "" if c.ok else f" [{c.status}: {c.reason}]"
         print(f"req {rid}: {len(c.tokens)} tokens "
               f"(prefill {c.prefill_s*1e3:.1f} ms, "
-              f"decode {c.decode_s*1e3:.1f} ms) -> {c.tokens[:8]}...")
+              f"decode {c.decode_s*1e3:.1f} ms) -> {c.tokens[:8]}..."
+              f"{tag}")
     print(f"{len(done)}/{n_requests} requests in {wall:.2f}s; "
           f"peak cache {engine.kv.peak_bytes/2**20:.1f} MiB "
           f"(budget {engine.kv.budget/2**20:.1f} MiB), "
@@ -70,11 +106,25 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
     if engine_mode == "continuous":
         total = sum(len(c.tokens) for c in done.values())
         print(f"iterations {engine.iterations}, dispatches "
-              f"{engine.dispatches} ({engine.dispatches/total:.2f}/tok), "
-              f"megasteps {engine.megasteps} "
+              f"{engine.dispatches} ({engine.dispatches/max(total, 1):.2f}"
+              f"/tok), megasteps {engine.megasteps} "
               f"({engine.megastep_steps} fused iters, "
               f"N={engine.megastep_n}), "
               f"preemptions {engine.preemptions}")
+        if faults is not None or max_queue is not None \
+                or deadline_s is not None:
+            by_status: "dict[str, int]" = {}
+            for c in done.values():
+                by_status[c.status] = by_status.get(c.status, 0) + 1
+            print(f"resolution {by_status}; degraded activations "
+                  f"{engine.degraded_activations} (watchdog trips "
+                  f"{engine.watchdog_trips}, megastep fallbacks "
+                  f"{engine.megastep_fallbacks}, retries "
+                  f"{engine.retry_dispatches}, rows failed "
+                  f"{engine.rows_failed}), cancellations "
+                  f"{engine.cancellations}, rejected {engine.rejected}, "
+                  f"budget events {engine.budget_events}")
+        engine.assert_quiescent()
     return done
 
 
@@ -94,10 +144,19 @@ def main():
                     help="decode iterations fused per dispatch "
                          "(default: env PARALLAX_MEGASTEP, then 8; "
                          "1 = per-iteration dispatch path)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="arm the fault-injection plane with this seed "
+                         "(default: env PARALLAX_FAULT_SEED, else off)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission queue depth cap (excess submissions "
+                         "are rejected with reason 'queue_full')")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline in seconds")
     args = ap.parse_args()
     serve(args.arch, args.requests, args.max_new, args.budget_mb,
           engine_mode=args.engine, paged=not args.dense_cache,
-          megastep=args.megastep)
+          megastep=args.megastep, fault_seed=args.fault_seed,
+          max_queue=args.max_queue, deadline_s=args.deadline_s)
 
 
 if __name__ == "__main__":

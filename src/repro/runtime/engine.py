@@ -87,9 +87,23 @@ class Request:
     prompt: "np.ndarray"           # (S,) int32
     max_new_tokens: int = 16
     eos_id: "int | None" = None    # stop after sampling this token
+    deadline_s: "float | None" = None   # wall seconds from submit();
+    # past it the engine cancels the request wherever it lives (waiting,
+    # mid-prefill or mid-decode), returning the partial stream
 
     def context_len(self) -> int:
         return len(self.prompt) + self.max_new_tokens
+
+
+#: Every submitted request resolves to exactly one of these — nothing is
+#: ever silently dropped.  "completed" is the only status whose stream
+#: is final; "cancelled" (explicit cancel / deadline) and "failed"
+#: (poisoned dispatch after retries, or the run's iteration cap) carry
+#: the partial stream generated so far, "rejected" (queue backpressure)
+#: carries none.  ``reason`` is machine-readable for non-completed
+#: statuses (e.g. "queue_full", "deadline", "poisoned_logits",
+#: "max_iters").
+COMPLETION_STATUSES = ("completed", "cancelled", "rejected", "failed")
 
 
 @dataclass
@@ -100,6 +114,36 @@ class Completion:
     decode_s: float = 0.0
     ttft_s: float = 0.0            # run-start -> first generated token
     ttft_admit_s: float = 0.0      # admission -> first generated token
+    status: str = "completed"      # one of COMPLETION_STATUSES
+    reason: "str | None" = None    # machine-readable, non-completed only
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "completed"
+
+
+def _validate_request(req: Request, max_context: "int | None") -> None:
+    """Reject malformed requests AT SUBMIT with a clear error — not ten
+    dispatches later with a pool assert deep inside prefill."""
+    prompt = np.asarray(req.prompt)
+    if prompt.ndim != 1:
+        raise ValueError(f"request {req.id}: prompt must be 1-D token "
+                         f"ids, got shape {prompt.shape}")
+    if len(prompt) == 0:
+        raise ValueError(f"request {req.id}: empty prompt")
+    if not np.issubdtype(prompt.dtype, np.integer):
+        raise ValueError(f"request {req.id}: prompt must hold integer "
+                         f"token ids, got dtype {prompt.dtype}")
+    if req.max_new_tokens < 0:
+        raise ValueError(f"request {req.id}: max_new_tokens must be "
+                         f">= 0, got {req.max_new_tokens}")
+    if req.deadline_s is not None and req.deadline_s <= 0:
+        raise ValueError(f"request {req.id}: deadline_s must be > 0, "
+                         f"got {req.deadline_s}")
+    if max_context is not None and req.context_len() > max_context:
+        raise ValueError(
+            f"request {req.id}: context {req.context_len()} exceeds "
+            f"max_context {max_context}")
 
 
 def _pad_to_multiple(arr: "np.ndarray", multiple: int) -> "np.ndarray":
@@ -147,18 +191,13 @@ class ServingEngine:
         self.stepper = stepper if stepper is not None else Stepper(api)
         self.dispatch_count = 0
 
-    def submit(self, req: Request) -> None:
-        if len(req.prompt) == 0:
-            raise ValueError(f"request {req.id}: empty prompt")
+    def submit(self, req: Request) -> bool:
+        _validate_request(req, self.max_context)
         if any(r.id == req.id for r in self.queue) \
                 or req.id in self.completed:
             raise ValueError(f"duplicate request id {req.id}")
-        if self.max_context is not None \
-                and req.context_len() > self.max_context:
-            raise ValueError(
-                f"request {req.id}: context {req.context_len()} exceeds "
-                f"max_context {self.max_context}")
         self.queue.append(req)
+        return True
 
     @property
     def dispatches(self) -> int:
@@ -215,7 +254,7 @@ class ServingEngine:
         for t in range(0, int(plens.max()), C):
             n_valid = np.clip(plens - t, 0, C)
             self.dispatch_count += 1
-            caches, _, first = self.stepper.prefill_chunk(
+            caches, _, first, _ = self.stepper.prefill_chunk(
                 self.params, caches, toks[:, t:t + C], lens, n_valid)
             done_here = (t < plens) & (plens <= t + C)
             if done_here.any():
@@ -249,7 +288,10 @@ class ServingEngine:
         while (count < max_new).any():
             active = count < max_new
             self.dispatch_count += 1
-            last_dev, caches = self.stepper.decode(
+            # the round baseline ignores the watchdog flag: it exists to
+            # measure the continuous engine against, and its semantics
+            # must not drift with the hardening work
+            last_dev, _, caches = self.stepper.decode(
                 self.params, caches, last, lens, active)
             last = np.asarray(last_dev)
             lens += active
@@ -286,6 +328,13 @@ class ServingEngine:
             for r in batch_reqs:
                 self.kv.admit(r.id, r.context_len())
             self._run_round(batch_reqs, t_run0, t_admit)
+        # the round cap is a liveness backstop, not a silent drop: every
+        # request still queued resolves as failed so callers can account
+        # for every submitted id
+        for r in self.queue:
+            self.completed[r.id] = Completion(r.id, status="failed",
+                                              reason="max_rounds")
+        self.queue.clear()
         return self.completed
 
 
@@ -303,6 +352,7 @@ class _Seq:
     ttft_admit_s: "float | None" = None
     admit_t: "float | None" = None     # first admission (pre-preemption)
     preempted: bool = False
+    submit_t: "float | None" = None    # deadline_s counts from here
 
     def pending_len(self) -> int:
         """len(pending_prompt()) without materializing it — the per-
@@ -362,6 +412,22 @@ class ContinuousEngine:
     immutable): the shared tokens are neither re-prefilled nor
     re-allocated.  ``paged=False`` keeps the dense per-slot arrays —
     the bit-identical baseline the paged path is validated against.
+
+    **Robustness** (see ``runtime/faults.py``): every dispatch carries
+    an in-trace NaN watchdog; a poisoned result degrades down a ladder —
+    megastep discarded (the pre-dispatch cache pytree is a free
+    checkpoint: the jits do not donate cache args, so caches update
+    functionally), N=1 sync retries with bounded exponential backoff
+    (``dispatch_retries`` / ``retry_backoff_s``), then only the affected
+    rows fail with ``reason="poisoned_logits"``.  The block-pool budget
+    can shrink/restore mid-run (``faults``); the engine preempts and
+    refuses growth instead of tripping pool asserts, and stalls rather
+    than raising while a scheduled restore can regain feasibility.
+    Requests can be cancelled (:meth:`cancel`) or carry deadlines
+    (``Request.deadline_s``); admission is bounded (``max_queue``) with
+    machine-readable rejections.  All of it is free on the happy path:
+    the watchdog rides existing dispatches and syncs, and the fault /
+    deadline hooks are single attribute checks when disarmed.
     """
 
     def __init__(self, api, params, hbm_budget_bytes: int,
@@ -370,7 +436,11 @@ class ContinuousEngine:
                  max_context: int = 64,
                  stepper: "Stepper | None" = None,
                  paged: bool = True, prefix_sharing: bool = True,
-                 megastep: "int | None" = None):
+                 megastep: "int | None" = None,
+                 faults=None,
+                 max_queue: "int | None" = None,
+                 dispatch_retries: int = 2,
+                 retry_backoff_s: float = 0.001):
         if api.cfg.is_encoder_decoder:
             raise ValueError("ContinuousEngine serves decoder-only "
                              "models (encoder-decoder needs an encoder "
@@ -432,6 +502,22 @@ class ContinuousEngine:
         self.iterations = 0
         self._admit_counter = 0
         self._t0: "float | None" = None
+        # fault plane + degradation bookkeeping (runtime/faults.py).
+        # Every counter below stays 0 on a fault-free run — the serving
+        # benchmark asserts it and gate.py regresses on it (the
+        # watchdog and deadline hooks must cost nothing when healthy).
+        self.faults = faults
+        self.max_queue = max_queue
+        self.dispatch_retries = dispatch_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.watchdog_trips = 0         # dispatches with >=1 bad row
+        self.megastep_fallbacks = 0     # megasteps discarded -> sync
+        self.retry_dispatches = 0       # extra N=1 retry dispatches
+        self.rows_failed = 0            # rows failed after retries
+        self.rejected = 0               # backpressure rejections
+        self.cancellations = 0          # cancel() + deadline expiries
+        self.budget_events = 0          # runtime budget adjustments
+        self._deadlines_armed = False
         # decode megastep: N fused iterations per dispatch (1 = the
         # per-iteration path; env PARALLAX_MEGASTEP overrides default)
         self.megastep_n = megastep_from_env(megastep)
@@ -444,20 +530,66 @@ class ContinuousEngine:
         # is skipped entirely (one dispatch saved per admission wave).
         self._needs_reset = self.kv.state_bytes > 0
 
-    def submit(self, req: Request) -> None:
-        if len(req.prompt) == 0:
-            raise ValueError(f"request {req.id}: empty prompt")
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  Malformed submissions raise; a full queue
+        (``max_queue``) REJECTS instead: False is returned and the id
+        resolves immediately as ``Completion(status="rejected",
+        reason="queue_full")`` — bounded admission with a machine-
+        readable result, never an unbounded queue or a silent drop."""
+        _validate_request(req, self.max_context)
         live = {s.req.id for s in self.slots if s is not None}
         if any(s.req.id == req.id for s in self.waiting) \
                 or req.id in live or req.id in self.completed:
             # admission/bookkeeping key on request id — a duplicate
             # would admit twice against one charged cost
             raise ValueError(f"duplicate request id {req.id}")
-        if req.context_len() > self.max_context:
-            raise ValueError(
-                f"request {req.id}: context {req.context_len()} exceeds "
-                f"max_context {self.max_context}")
-        self.waiting.append(_Seq(req))
+        if self.max_queue is not None \
+                and len(self.waiting) >= self.max_queue:
+            self.rejected += 1
+            self.completed[req.id] = Completion(
+                req.id, status="rejected", reason="queue_full")
+            return False
+        if req.deadline_s is not None:
+            self._deadlines_armed = True
+        self.waiting.append(_Seq(req, submit_t=time.perf_counter()))
+        return True
+
+    def cancel(self, req_id: int, reason: str = "cancelled") -> bool:
+        """Cancel a request wherever it lives — waiting (including
+        demoted), mid-prefill or mid-decode — reclaiming its cache
+        blocks immediately.  The partial stream generated so far is
+        returned as ``Completion(status="cancelled")``; it is a strict
+        prefix of the stream a fault-free run would produce.  Returns
+        False when the id is unknown or already resolved."""
+        for seq in self.waiting:
+            if seq.req.id == req_id:
+                self.waiting.remove(seq)
+                self.cancellations += 1
+                self._resolve(seq, "cancelled", reason)
+                return True
+        for s in range(self.max_batch):
+            seq = self.slots[s]
+            if seq is not None and seq.req.id == req_id:
+                self.cancellations += 1
+                self._release_slot(s)
+                self._resolve(seq, "cancelled", reason)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        """Cancel every request whose ``deadline_s`` has passed (wall
+        time since submit).  Only called when a deadline exists
+        (``_deadlines_armed``), so the happy path pays one bool check."""
+        now = time.perf_counter()
+        for seq in [s for s in self.waiting
+                    if s.req.deadline_s is not None]:
+            if now - seq.submit_t >= seq.req.deadline_s:
+                self.cancel(seq.req.id, reason="deadline")
+        for s in range(self.max_batch):
+            seq = self.slots[s]
+            if seq is not None and seq.req.deadline_s is not None \
+                    and now - seq.submit_t >= seq.req.deadline_s:
+                self.cancel(seq.req.id, reason="deadline")
 
     @property
     def dispatches(self) -> int:
@@ -466,6 +598,13 @@ class ContinuousEngine:
     @property
     def num_active(self) -> int:
         return int((self.slot_phase != FREE).sum())
+
+    @property
+    def degraded_activations(self) -> int:
+        """Total degraded-mode events — 0 on any fault-free run (the
+        benchmark asserts it; gate.py regresses on it)."""
+        return (self.watchdog_trips + self.megastep_fallbacks
+                + self.retry_dispatches + self.rows_failed)
 
     # -- iteration phases ---------------------------------------------------
 
@@ -488,6 +627,8 @@ class ContinuousEngine:
                 break
             need = self.kv.bytes_for(seq.pending_len())
             if need > self.kv.budget:
+                if self._budget_may_recover(need):
+                    break    # shrunk pool; a scheduled restore covers it
                 # grown past what the whole pool can ever hold: waiting
                 # would block fresh admission forever — fail it now
                 raise MemoryError(
@@ -576,12 +717,13 @@ class ContinuousEngine:
             self.kv.check_write(s, int(self.slot_len[s]),
                                 int(self.slot_len[s]) + take)
         self.dispatch_count += 1
-        self.caches, _, first = self.stepper.prefill_chunk(
+        self.caches, _, first, bad_dev = self.stepper.prefill_chunk(
             self.params, self.caches, toks, self.slot_len, n_valid,
             block_tables=self.tables)
         self.slot_len += n_valid
         self.slot_off += n_valid
         first_host: "list[np.ndarray]" = []   # read lazily: syncs
+        bad_host: "list[np.ndarray]" = []
         for s in pre:
             if self.prefix_sharing:
                 # newly completed full prompt blocks become shareable
@@ -593,6 +735,17 @@ class ContinuousEngine:
                 continue                      # more prompt next iteration
             if not first_host:
                 first_host.append(np.asarray(first))
+                bad_host.append(np.asarray(bad_dev))
+            if bad_host[0][s]:
+                # the chunk watchdog is checked at the same lazy sync
+                # that reads the first token — a NaN argmax must never
+                # enter a stream.  Mid-prompt corruption needs no extra
+                # sync: a NaN hidden state propagates through the cache
+                # and the decode watchdog backstops it within one
+                # iteration.
+                self.watchdog_trips += 1
+                self._fail(s, "poisoned_logits")
+                continue
             self._complete_prefill(s, lambda s=s: int(first_host[0][s]))
 
     def _complete_prefill(self, slot: int, get_first_tok) -> None:
@@ -633,6 +786,12 @@ class ContinuousEngine:
                           if self.slot_phase[v] != FREE]
                 victim = max(active, key=lambda v: self.slot_seq[v])
                 if victim == s and len(active) == 1:
+                    if self._budget_may_recover(
+                            self.kv.bytes_for(int(self.slot_len[s]) + 1)):
+                        # shrunk below a single row: demote it and stall
+                        # until the scheduled budget restore re-admits
+                        self._preempt(s)
+                        break
                     raise MemoryError(
                         f"block pool budget {self.kv.budget} cannot hold "
                         f"a single growing request (slot {s}, "
@@ -645,24 +804,30 @@ class ContinuousEngine:
 
     def _preempt(self, slot: int) -> None:
         seq = self.slots[slot]
-        self.kv.free(slot)
-        self.slots[slot] = None
-        self._slot_prompt[slot] = None
-        self.slot_phase[slot] = FREE
-        if self.paged:
-            self.tables[slot, :] = self.scratch_block
+        self._release_slot(slot)
         seq.preempted = True                  # priority re-admission
         self.waiting.appendleft(seq)
         self.preemptions += 1
 
-    def _decode(self) -> None:
+    def _decode(self, attempts_used: int = 0) -> None:
         """ONE dispatch advances every active slot by one token: decode
         rows feed their last sampled token; rows still holding prompt
         tokens (short tails the chunk path skipped) feed the next prompt
         token instead — iteration-level batching à la Orca, so trailing
         prefill costs zero extra dispatches.  A row consuming its final
         prompt token gets its first generated token from this very
-        dispatch's argmax."""
+        dispatch's argmax.
+
+        This is also the bottom of the degradation ladder: when the
+        in-dispatch watchdog flags a row, the dispatch is discarded (the
+        pre-dispatch cache pytree is the checkpoint — the jits do not
+        donate cache args, so caches update functionally and holding the
+        old reference is O(1)) and retried up to ``dispatch_retries``
+        times with exponential backoff; exhausting the ladder commits
+        the clean rows from the final dispatch (rows are computationally
+        independent) and fails only the affected rows.
+        ``attempts_used`` counts dispatch attempts this iteration
+        already burned (1 after a discarded megastep)."""
         decoding = self.slot_phase == DECODE
         prefilling = self.slot_phase == PREFILL
         active = decoding | prefilling
@@ -674,13 +839,30 @@ class ContinuousEngine:
         for s in np.flatnonzero(active):
             self.kv.check_write(int(s), int(self.slot_len[s]),
                                 int(self.slot_len[s]) + 1)
-        self.dispatch_count += 1
-        nxt, self.caches = self.stepper.decode(
-            self.params, self.caches, toks, self.slot_len, active,
-            block_tables=self.tables)
-        nxt_host = np.asarray(nxt)
+        attempt = attempts_used
+        while True:
+            snapshot = self.caches
+            self.dispatch_count += 1
+            if attempt > attempts_used:
+                self.retry_dispatches += 1
+            nxt, bad_dev, self.caches = self.stepper.decode(
+                self.params, self.caches, toks, self.slot_len, active,
+                block_tables=self.tables, poison=self._poison(attempt))
+            nxt_host = np.asarray(nxt)        # the one sync per step
+            bad = np.asarray(bad_dev)
+            if not bad.any():
+                break
+            self.watchdog_trips += 1
+            if attempt - attempts_used >= self.dispatch_retries:
+                break        # ladder exhausted: fail the bad rows below
+            self.caches = snapshot            # discard poisoned writes
+            time.sleep(self.retry_backoff_s
+                       * (1 << (attempt - attempts_used)))
+            attempt += 1
         self.slot_len += active
-        for s in np.flatnonzero(prefilling):
+        for s in np.flatnonzero(bad):
+            self._fail(int(s), "poisoned_logits")
+        for s in np.flatnonzero(prefilling & ~bad):
             self.slot_off[s] += 1
             if self.prefix_sharing:
                 self.kv.publish(int(s), self._slot_prompt[s],
@@ -688,7 +870,7 @@ class ContinuousEngine:
             if self.slot_off[s] < len(self._slot_prompt[s]):
                 continue
             self._complete_prefill(int(s), lambda s=s: int(nxt_host[s]))
-        for s in np.flatnonzero(decoding):
+        for s in np.flatnonzero(decoding & ~bad):
             seq = self.slots[s]
             tok = int(nxt_host[s])
             seq.gen.append(tok)
@@ -696,6 +878,15 @@ class ContinuousEngine:
             if len(seq.gen) >= seq.req.max_new_tokens \
                     or tok == seq.req.eos_id:
                 self._finish(int(s))
+
+    def _poison(self, attempt: int) -> "np.ndarray | None":
+        """Fault-plane injection mask for this iteration's dispatch
+        ``attempt`` (None on clean runs — the stepper then uses the
+        clean executables and no injection code is ever compiled)."""
+        if self.faults is None:
+            return None
+        return self.faults.poison_rows(self.iterations, attempt,
+                                       self.max_batch)
 
     # -- decode megastep: reserve -> scan -> reconcile ----------------------
 
@@ -817,12 +1008,31 @@ class ContinuousEngine:
                 int(self.slot_len[s]) + min(n, int(budget[s])))
         self.dispatch_count += 1
         self.megasteps += 1
-        toks_dev, act_dev, self.caches = self.stepper.megastep(
+        snapshot = self.caches                # free O(1) checkpoint
+        toks_dev, act_dev, bad_dev, self.caches = self.stepper.megastep(
             self.params, self.caches, self.slot_last, self.slot_len,
             active, budget, forced, n_forced, eos_ids,
-            block_tables=self.tables)
+            block_tables=self.tables, poison=self._poison(0))
         toks_out = np.asarray(toks_dev)       # (n, B) — the ONE sync
         act_out = np.asarray(act_dev)
+        bad = np.asarray(bad_dev)
+        if bad.any():
+            # watchdog tripped inside the fused scan: one poisoned step
+            # contaminates every later step of that row, so the whole
+            # dispatch is discarded — restore the pre-dispatch cache
+            # pytree, return the bulk reservation, and degrade to the
+            # N=1 sync path (which retries with backoff and can fail
+            # rows individually).  No bookkeeping above this point
+            # mutated engine state, so the fallback replays the
+            # iteration exactly.
+            self.caches = snapshot
+            self.watchdog_trips += 1
+            self.megastep_fallbacks += 1
+            for s in np.flatnonzero(active):
+                self._release_reservation(int(s))
+            self._grow_or_preempt()
+            self._decode(attempts_used=1)
+            return
         now = time.perf_counter()             # post-reconciliation stamp
         steps = act_out.sum(axis=0).astype(np.int32)
         self.megastep_steps += int(steps.max())
@@ -871,20 +1081,49 @@ class ContinuousEngine:
             if self.kv.release_to(s, keep):
                 self._refresh_table(s)
 
-    def _finish(self, slot: int) -> None:
-        """Release the slot's cache blocks the iteration it finishes."""
-        seq = self.slots[slot]
+    def _release_reservation(self, slot: int) -> None:
+        """Return an occupied slot's reserved-but-unwritten blocks —
+        everything past its written watermark (plus a prefilling row's
+        admitted prompt blocks) — undoing a megastep bulk reserve whose
+        scan was discarded or never launched."""
+        keep = max(int(self.slot_len[slot]),
+                   len(self._slot_prompt[slot])
+                   if self.slot_phase[slot] == PREFILL else 0)
+        if self.kv.release_to(slot, keep):
+            self._refresh_table(slot)
+
+    def _release_slot(self, slot: int) -> None:
+        """Free the slot's cache blocks and park it (shared by finish /
+        fail / cancel — any way a request leaves its slot)."""
         self.kv.free(slot)
         self.slots[slot] = None
         self._slot_prompt[slot] = None
         self.slot_phase[slot] = FREE
         if self.paged:
             self.tables[slot, :] = self.scratch_block
+
+    def _resolve(self, seq: "_Seq", status: str,
+                 reason: "str | None" = None) -> None:
         self.completed[seq.req.id] = Completion(
             seq.req.id, tokens=list(seq.gen),
             ttft_s=seq.ttft_s if seq.ttft_s is not None else 0.0,
             ttft_admit_s=seq.ttft_admit_s
-            if seq.ttft_admit_s is not None else 0.0)
+            if seq.ttft_admit_s is not None else 0.0,
+            status=status, reason=reason)
+
+    def _finish(self, slot: int) -> None:
+        """Release the slot's cache blocks the iteration it finishes."""
+        seq = self.slots[slot]
+        self._release_slot(slot)
+        self._resolve(seq, "completed")
+
+    def _fail(self, slot: int, reason: str) -> None:
+        """Fail ONE row (bottom of the degradation ladder), reclaiming
+        its blocks; the partial stream rides the Completion."""
+        seq = self.slots[slot]
+        self.rows_failed += 1
+        self._release_slot(slot)
+        self._resolve(seq, "failed", reason)
 
     # -- driver -------------------------------------------------------------
 
@@ -900,23 +1139,62 @@ class ContinuousEngine:
         if self._t0 is None:
             self._t0 = time.perf_counter()
         self.iterations += 1
+        if self.faults is not None:
+            self._apply_faults(self.faults.events_at(self.iterations))
+        if self._deadlines_armed:
+            self._expire_deadlines()
         admitted = self._admit()
         if self.num_active == 0:
             if admitted == 0 and self.waiting:
                 smallest = min(s.pending_len() for s in self.waiting)
+                need = self.kv.bytes_for(smallest)
+                if self._budget_may_recover(need):
+                    return    # stall: a scheduled budget restore pends
                 raise MemoryError(
                     f"no request fits: smallest pending prompt needs "
-                    f"{self.kv.bytes_for(smallest)} bytes, budget is "
-                    f"{self.kv.budget}")
+                    f"{need} bytes, budget is {self.kv.budget}")
             if admitted == 0:
                 return
         self._prefill()
         n, plans = self._plan_megastep()
+        if n >= 2 and self.faults is not None:
+            posted = self.faults.events_at(self.iterations,
+                                           when="post_reserve")
+            if posted:
+                # a cancel landing right after the megastep bulk
+                # reserve: return every slot's reservation, apply the
+                # cancel, and take the sync path this iteration —
+                # exercises mid-scan-reservation block reclamation
+                for s in range(self.max_batch):
+                    if self.slot_phase[s] != FREE:
+                        self._release_reservation(s)
+                self._apply_faults(posted)
+                n = 0
         if n >= 2:
             self._megastep(n, plans)
         else:
             self._grow_or_preempt()
             self._decode()
+
+    def _apply_faults(self, events) -> None:
+        for e in events:
+            if e.kind == "budget":
+                self.kv.set_budget(e.budget_bytes)
+                self.budget_events += 1
+            elif e.kind == "cancel":
+                self.cancel(e.request_id, reason="injected_cancel")
+
+    def _budget_may_recover(self, need: int) -> bool:
+        """True while the fault plane schedules a future budget event
+        of at least ``need`` bytes — the engine stalls on infeasibility
+        instead of raising MemoryError, because the scheduled restore
+        can make the pool feasible again.  Without a plane (or without
+        such an event) infeasibility is permanent and raising stays
+        correct."""
+        if self.faults is None:
+            return False
+        fut = self.faults.max_future_budget(self.iterations)
+        return fut is not None and fut >= need
 
     def run(self, max_iters: int = 100_000) -> "dict[int, Completion]":
         self._t0 = time.perf_counter()
@@ -924,4 +1202,33 @@ class ContinuousEngine:
         while (self.waiting or self.num_active) and it < max_iters:
             self.step()
             it += 1
+        if self.waiting or self.num_active:
+            # the iteration cap is a liveness backstop, not a silent
+            # drop: every still-live request resolves as failed (blocks
+            # reclaimed, partial streams returned) so callers can
+            # account for every submitted id and the pool still drains
+            # to quiescence
+            for s in range(self.max_batch):
+                if self.slots[s] is not None:
+                    self._fail(s, "max_iters")
+            while self.waiting:
+                seq = self.waiting.popleft()
+                self._resolve(seq, "failed", "max_iters")
         return self.completed
+
+    def assert_quiescent(self) -> None:
+        """Zero-leak audit once every request resolved: no occupied
+        slots, all phases FREE, nothing waiting, every block-table row
+        parked on the scratch block, and the block pool fully drained
+        (:meth:`BlockKVCache.assert_quiescent`)."""
+        live = [s for s in range(self.max_batch)
+                if self.slots[s] is not None]
+        assert not live, f"slots still occupied: {live}"
+        assert not (self.slot_phase != FREE).any(), \
+            f"non-FREE slot phases: {self.slot_phase.tolist()}"
+        assert not self.waiting, \
+            f"requests still waiting: {[s.req.id for s in self.waiting]}"
+        if self.paged:
+            assert (self.tables == self.scratch_block).all(), \
+                "block-table rows not parked on the scratch block"
+        self.kv.assert_quiescent()

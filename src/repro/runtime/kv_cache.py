@@ -201,7 +201,21 @@ class BlockKVCache:
 
     @property
     def headroom(self) -> int:
+        """May be NEGATIVE after a runtime budget shrink — every
+        admission/growth path treats it as "no room" (blocks_for * bytes
+        can never be < 0), so a shrunk pool refuses growth until enough
+        blocks drain or the budget is restored."""
         return self.budget - self.in_use
+
+    def set_budget(self, budget_bytes: int) -> None:
+        """Adjust the pool budget at runtime (co-tenant memory pressure,
+        driven by the fault plane).  The new budget may be BELOW the
+        bytes currently in use: nothing is evicted here — the engine
+        reacts by refusing admission/growth and demote-preempting until
+        ``in_use`` fits again."""
+        if budget_bytes < 0:
+            raise ValueError(f"budget must be >= 0, got {budget_bytes}")
+        self.budget = budget_bytes
 
     @property
     def in_use(self) -> int:
@@ -393,6 +407,29 @@ class BlockKVCache:
             self.state_pool.release(state)
         self._published.pop(slot, None)
         self._chain.pop(slot, None)
+
+    def assert_quiescent(self) -> None:
+        """Assert the pool is fully drained: no live block tables or
+        state slabs, zero bytes in use, no refcounts, and an empty
+        prefix-sharing registry.  This is the zero-leak invariant every
+        engine run must restore once all requests resolve (completed,
+        cancelled, rejected or failed) — the chaos suite calls it after
+        every fault schedule, and the engine tests after every run, so a
+        single leaked block anywhere in the admit/grow/release_to/free
+        lifecycle fails loudly instead of silently shrinking the pool."""
+        assert not self.block_tables, \
+            f"leaked block tables for slots {sorted(self.block_tables)}"
+        assert not self.state_slabs, \
+            f"leaked state slabs for slots {sorted(self.state_slabs)}"
+        assert self.pool.in_use == 0, \
+            f"block pool still holds {self.pool.in_use} bytes"
+        assert self.state_pool.in_use == 0, \
+            f"state pool still holds {self.state_pool.in_use} bytes"
+        assert not self._ref, f"dangling block refcounts: {self._ref}"
+        assert not self._registry and not self._slab_hash, \
+            "prefix-sharing registry not empty after drain"
+        assert not self._published and not self._chain, \
+            "publish watermarks outlive their slots"
 
     def table_ids(self, slot: int) -> "list[int]":
         """The slot's physical block table (slab ids double as pool row

@@ -42,6 +42,32 @@ def select_tokens(logits, active, fallback):
                      fallback.astype(jnp.int32))
 
 
+def logits_watchdog(logits, active):
+    """(B, V) logits, (B,) active -> (B,) bool: active rows whose logits
+    contain a non-finite value (NaN or inf) — a poisoned dispatch.
+
+    This is the serving engine's in-dispatch health check: it is fused
+    into every decode/megastep/chunk trace (a single ``isfinite``
+    reduction over logits the dispatch already materialized), so
+    detection costs zero extra dispatches and nothing on the host until
+    the flag is read alongside the sampled tokens the engine transfers
+    anyway.  Inactive rows report healthy regardless of their (ignored)
+    logits.
+    """
+    return active & jnp.logical_not(
+        jnp.all(jnp.isfinite(logits), axis=-1))
+
+
+def poison_logits(logits, rows):
+    """Overwrite ``rows`` (B,) bool rows of (B, V) logits with NaN —
+    the fault plane's in-trace injection point.  Lives next to the
+    watchdog so injection and detection share one definition of
+    "poisoned"; only the Stepper's lazily-built poisoned twins ever
+    trace it (the clean executables contain no injection code)."""
+    return jnp.where(rows[:, None], jnp.asarray(jnp.nan, logits.dtype),
+                     logits)
+
+
 def megastep_advance(logits, last, active, budget, n_forced, eos_ids,
                      step):
     """One megastep iteration's on-device sampling-state update.

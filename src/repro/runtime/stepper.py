@@ -25,6 +25,13 @@ One :class:`Stepper` owns exactly two jitted callables per batch shape:
   allocates (see ``ContinuousEngine._plan_megastep``).  Each distinct N
   is a distinct trace (``megastep_sizes``); a given N never retraces.
 
+Every step function additionally returns an in-trace NaN **watchdog**
+flag per row (:func:`~repro.runtime.sampling.logits_watchdog`) — fused
+into the dispatch, so a poisoned accelerator result is detected with
+zero extra dispatches.  Fault injection uses separately-jitted
+*poisoned* twins (built lazily, counted by ``poisoned_traces``): clean
+executables never contain injection code.
+
 Trace counters are incremented inside the traced Python bodies (which
 run only at trace time), so ``chunk_traces`` / ``decode_traces`` observe
 XLA retraces directly; ``dispatches`` counts calls.
@@ -36,7 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .sampling import greedy_serving, megastep_advance, select_tokens
+from .sampling import (greedy_serving, logits_watchdog, megastep_advance,
+                       poison_logits, select_tokens)
 
 
 def _device(x, dtype):
@@ -71,6 +79,9 @@ class Stepper:
         # re-appearing would mean a RE-trace (tests assert counters ==
         # set sizes, i.e. one trace per distinct scan length)
         self.megastep_sizes: "set[tuple[bool, int]]" = set()
+        # fault-injection twins trace separately (chaos-only): counted
+        # apart so the clean counters' no-retrace assertions stay exact
+        self.poisoned_traces = 0
         self.dispatches = 0
         self._decode = jax.jit(self._make_decode(paged=False))
         self._chunk = jax.jit(self._make_chunk(paged=False))
@@ -79,14 +90,31 @@ class Stepper:
         self._mega = jax.jit(self._make_megastep(paged=False))
         self._mega_paged = jax.jit(self._make_megastep(paged=True))
         self._reset = jax.jit(self._make_reset())
+        # poisoned twins — identical math plus an in-trace NaN injection
+        # (sampling.poison_logits) — are built lazily on the first
+        # poisoned dispatch: a clean run never compiles injection code
+        self._poison_jits: "dict[tuple[str, bool], object]" = {}
+
+    def _poisoned(self, kind: str, paged: bool):
+        key = (kind, paged)
+        fn = self._poison_jits.get(key)
+        if fn is None:
+            maker = {"decode": self._make_decode,
+                     "mega": self._make_megastep}[kind]
+            fn = jax.jit(maker(paged=paged, poisoned=True))
+            self._poison_jits[key] = fn
+        return fn
 
     # -- decode -------------------------------------------------------------
 
-    def _make_decode(self, paged: bool):
+    def _make_decode(self, paged: bool, poisoned: bool = False):
         decode = self.api.decode_fn
 
-        def step(params, caches, toks, lens, active, tables=None):
-            if paged:                        # trace-time side effects
+        def step(params, caches, toks, lens, active, tables=None,
+                 poison=None):
+            if poisoned:                     # trace-time side effects
+                self.poisoned_traces += 1
+            elif paged:
                 self.paged_decode_traces += 1
             else:
                 self.decode_traces += 1
@@ -95,23 +123,33 @@ class Stepper:
             if tables is not None:
                 batch["block_tables"] = tables
             logits, caches = decode(params, caches, batch)
-            return select_tokens(logits, active, toks), caches
+            if poisoned:
+                logits = poison_logits(logits, poison)
+            bad = logits_watchdog(logits, active)
+            return select_tokens(logits, active, toks), bad, caches
 
         return step
 
     def decode(self, params, caches, toks, lens, active,
-               block_tables=None):
-        """toks/lens/active (B,) -> (next_tok (B,), new caches).
-        ``block_tables`` (B, blocks_per_seq) selects the paged twin."""
+               block_tables=None, poison=None):
+        """toks/lens/active (B,) -> (next_tok (B,), bad (B,), caches).
+        ``bad`` flags active rows whose logits came back non-finite (the
+        in-dispatch watchdog — :func:`~repro.runtime.sampling.
+        logits_watchdog`).  ``block_tables`` (B, blocks_per_seq) selects
+        the paged twin; ``poison`` (B,) bool routes to the lazily-built
+        poisoned twin that NaNs those rows' logits in-trace (fault
+        injection — never compiled on clean runs)."""
         self.dispatches += 1
+        args = (params, caches, _device(toks, jnp.int32),
+                _device(lens, jnp.int32), _device(active, bool))
+        if poison is not None:
+            fn = self._poisoned("decode", block_tables is not None)
+            tbl = None if block_tables is None \
+                else _device(block_tables, jnp.int32)
+            return fn(*args, tbl, _device(poison, bool))
         if block_tables is None:
-            return self._decode(params, caches, _device(toks, jnp.int32),
-                                _device(lens, jnp.int32),
-                                _device(active, bool))
-        return self._decode_paged(params, caches,
-                                  _device(toks, jnp.int32),
-                                  _device(lens, jnp.int32),
-                                  _device(active, bool),
+            return self._decode(*args)
+        return self._decode_paged(*args,
                                   _device(block_tables, jnp.int32))
 
     # -- chunked prefill ----------------------------------------------------
@@ -127,7 +165,7 @@ class Stepper:
             B, C = toks.shape
 
             def step(carry, x):
-                caches, lens, first = carry
+                caches, lens, first, bad = carry
                 tok_col, i = x
                 active = i < n_valid
                 batch = {"tokens": tok_col[:, None], "cache_len": lens,
@@ -137,14 +175,16 @@ class Stepper:
                 logits, caches = decode(params, caches, batch)
                 first = jnp.where(i == n_valid - 1,
                                   greedy_serving(logits), first)
+                bad = bad | logits_watchdog(logits, active)
                 lens = lens + active.astype(jnp.int32)
-                return (caches, lens, first), None
+                return (caches, lens, first, bad), None
 
             first0 = jnp.zeros((B,), jnp.int32)
-            (caches, lens, first), _ = jax.lax.scan(
-                step, (caches, lens, first0),
+            bad0 = jnp.zeros((B,), bool)
+            (caches, lens, first, bad), _ = jax.lax.scan(
+                step, (caches, lens, first0, bad0),
                 (jnp.swapaxes(toks, 0, 1), jnp.arange(C, dtype=jnp.int32)))
-            return caches, lens, first
+            return caches, lens, first, bad
 
         return run_chunk
 
@@ -153,9 +193,8 @@ class Stepper:
         """toks (B, C); lens/n_valid (B,).  Consumes ``n_valid[b]`` prompt
         tokens for row b starting at its ``lens[b]`` cache position.
         Returns (caches, new lens, first-token per row — meaningful only
-        for rows whose prompt completed inside this chunk).  The chunk's
-        writes land inside the blocks ``block_tables`` already maps (the
-        engine allocates a slot's prompt blocks at admission)."""
+        for rows whose prompt completed inside this chunk, watchdog flag
+        per row OR-ed over the chunk's steps)."""
         self.dispatches += 1
         if block_tables is None:
             return self._chunk(params, caches, _device(toks, jnp.int32),
@@ -169,20 +208,23 @@ class Stepper:
 
     # -- decode megastep ----------------------------------------------------
 
-    def _make_megastep(self, paged: bool):
+    def _make_megastep(self, paged: bool, poisoned: bool = False):
         decode = self.api.decode_fn
 
         def run(params, caches, toks, lens, active, budget, forced,
-                n_forced, eos_ids, tables=None):
-            if paged:                        # trace-time side effects
-                self.paged_megastep_traces += 1
+                n_forced, eos_ids, tables=None, poison=None):
+            if poisoned:                     # trace-time side effects
+                self.poisoned_traces += 1
             else:
-                self.megastep_traces += 1
-            self.megastep_sizes.add((paged, forced.shape[1]))
+                if paged:
+                    self.paged_megastep_traces += 1
+                else:
+                    self.megastep_traces += 1
+                self.megastep_sizes.add((paged, forced.shape[1]))
             N = forced.shape[1]
 
             def body(carry, xs):
-                caches, last, lens, active, budget = carry
+                caches, last, lens, active, budget, bad = carry
                 f_col, s = xs
                 # rows still consuming prompt (or a resumed request's
                 # re-fed last token) take the forced column; everyone
@@ -193,39 +235,55 @@ class Stepper:
                 if tables is not None:
                     batch["block_tables"] = tables
                 logits, caches = decode(params, caches, batch)
+                if poisoned:
+                    # the fault fires at the megastep's FIRST fused
+                    # iteration — the engine iteration it was keyed to
+                    logits = poison_logits(logits, poison & (s == 0))
+                bad = bad | logits_watchdog(logits, active)
                 nxt, nactive, budget = megastep_advance(
                     logits, last, active, budget, n_forced, eos_ids, s)
                 lens = lens + active.astype(jnp.int32)
                 # emit the pre-update mask: which rows EXECUTED this
                 # step (wrote their cache and, on gen steps, a token)
-                return (caches, nxt, lens, nactive, budget), (nxt, active)
+                return (caches, nxt, lens, nactive, budget, bad), \
+                    (nxt, active)
 
-            (caches, _, _, _, _), (toks_out, act_out) = jax.lax.scan(
-                body, (caches, toks, lens, active, budget),
+            bad0 = jnp.zeros_like(active)
+            (caches, _, _, _, _, bad), (toks_out, act_out) = jax.lax.scan(
+                body, (caches, toks, lens, active, budget, bad0),
                 (jnp.swapaxes(forced, 0, 1),
                  jnp.arange(N, dtype=jnp.int32)))
-            return toks_out, act_out, caches
+            return toks_out, act_out, bad, caches
 
         return run
 
     def megastep(self, params, caches, toks, lens, active, budget,
-                 forced, n_forced, eos_ids, block_tables=None):
+                 forced, n_forced, eos_ids, block_tables=None,
+                 poison=None):
         """N fused decode iterations, ONE dispatch, ONE host sync.
 
         toks/lens/active/budget/n_forced/eos_ids (B,); forced (B, N)
         prompt tokens to force-feed (row b uses column s while
         ``s < n_forced[b]``).  Returns ``(toks_out (N, B), act_out
-        (N, B), new caches)`` — ``act_out[s]`` is the mask of rows that
-        executed scan step ``s``; the token stream of row b is
-        ``toks_out[n_forced[b]-1 : steps_taken, b]``.  The caller must
-        have reserved cache blocks for every position the scan can
-        write: the scan itself never allocates.
+        (N, B), bad (B,), new caches)`` — ``act_out[s]`` is the mask of
+        rows that executed scan step ``s``; the token stream of row b is
+        ``toks_out[n_forced[b]-1 : steps_taken, b]``; ``bad`` is the
+        in-carry NaN watchdog, OR-ed over every executed step.  The
+        caller must have reserved cache blocks for every position the
+        scan can write: the scan itself never allocates.  ``poison``
+        (B,) bool routes to the lazily-built poisoned twin (fault
+        injection at scan step 0; never compiled on clean runs).
         """
         self.dispatches += 1
         args = (params, caches, _device(toks, jnp.int32),
                 _device(lens, jnp.int32), _device(active, bool),
                 _device(budget, jnp.int32), _device(forced, jnp.int32),
                 _device(n_forced, jnp.int32), _device(eos_ids, jnp.int32))
+        if poison is not None:
+            fn = self._poisoned("mega", block_tables is not None)
+            tbl = None if block_tables is None \
+                else _device(block_tables, jnp.int32)
+            return fn(*args, tbl, _device(poison, bool))
         if block_tables is None:
             return self._mega(*args)
         return self._mega_paged(*args, _device(block_tables, jnp.int32))

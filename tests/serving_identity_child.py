@@ -11,6 +11,7 @@ runtime/engine.py for the full determinism contract.
 
 Usage: python serving_identity_child.py <arch> [<arch> ...]
        python serving_identity_child.py --fuzz <arch> [<arch> ...]
+       python serving_identity_child.py --chaos <arch> [<seed> ...]
 Prints one JSON object {arch: {...checks...}} on the last stdout line.
 
 ``--fuzz`` runs the megastep termination fuzz instead of the identity
@@ -18,6 +19,13 @@ matrix: rows hitting max-token or EOS at EVERY offset within the
 megastep must produce streams bit-identical to the per-iteration
 (N=1) engine, with every reserved-but-unused block returned to the
 pool (see tests/test_megastep.py, which drives this mode).
+
+``--chaos`` runs the fault-injection fuzz (tests/test_chaos.py): for
+each seed, random fault schedules (budget shrink/restore, poisoned
+dispatches, cancellations — each kind alone and combined) replay at
+megastep N in {1, 8} against a fault-free reference, asserting every
+submitted id resolves, completed streams stay bit-identical, partial
+streams are prefixes, and the engine drains to quiescence every run.
 """
 
 import json
@@ -40,8 +48,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.runtime.engine import (FREE, PREFILL, ContinuousEngine,
-                                  Request, ServingEngine)
+from repro.runtime.engine import (COMPLETION_STATUSES, FREE, PREFILL,
+                                  ContinuousEngine, Request,
+                                  ServingEngine)
+from repro.runtime.faults import FaultEvent, FaultPlane
+from repro.runtime.kv_cache import BlockKVCache
 from repro.runtime.stepper import Stepper
 
 MAX_CONTEXT = 32
@@ -85,6 +96,8 @@ def run_arch(arch: str) -> dict:
         c_eng.submit(fresh(r))
         d_eng.submit(fresh(r))
     rd, cd, dd = r_eng.run(), c_eng.run(), d_eng.run()
+    c_eng.assert_quiescent()
+    d_eng.assert_quiescent()
     n_tokens = sum(len(c.tokens) for c in cd.values())
 
     out = {
@@ -121,6 +134,8 @@ def run_arch(arch: str) -> dict:
         big.submit(fresh(r))
         tight.submit(fresh(r))
     bd, td = big.run(), tight.run()
+    big.assert_quiescent()
+    tight.assert_quiescent()
     out["tight_completed"] = len(td) == len(uniform)
     out["tight_identical"] = all(bd[r.id].tokens == td[r.id].tokens
                                  for r in uniform)
@@ -135,6 +150,7 @@ def run_arch(arch: str) -> dict:
     solo.submit(fresh(reqs[-1]))
     out["isolation"] = solo.run()[reqs[-1].id].tokens \
         == cd[reqs[-1].id].tokens
+    solo.assert_quiescent()
 
     # megastep invariance: the default engines above already ran fused
     # (N=8); N=1 (per-iteration path, exercising the plain decode twin)
@@ -148,6 +164,7 @@ def run_arch(arch: str) -> dict:
         for r in reqs:
             eng.submit(fresh(r))
         ed = eng.run()
+        eng.assert_quiescent()
         mega_ok &= all(ed[r.id].tokens == cd[r.id].tokens for r in reqs)
     out["megastep_invariant"] = mega_ok
     out["megasteps_used"] = c_eng.megasteps
@@ -167,6 +184,7 @@ def run_arch(arch: str) -> dict:
             eng.submit(Request(r.id, r.prompt, r.max_new_tokens,
                                eos_id=eos_tok))
         ed = eng.run()
+        eng.assert_quiescent()
         eos_streams.append({r.id: ed[r.id].tokens for r in reqs})
     out["eos_identical"] = eos_streams[0] == eos_streams[1]
     out["eos_truncated"] = (
@@ -212,6 +230,8 @@ def run_arch(arch: str) -> dict:
             share_on.submit(fresh(r))
             share_off.submit(fresh(r))
         sd, nd = share_on.run(), share_off.run()
+        share_on.assert_quiescent()
+        share_off.assert_quiescent()
         out["sharing_identical"] = all(sd[r.id].tokens == nd[r.id].tokens
                                        for r in spr)
         out["shared_hits"] = share_on.kv.shared_block_hits
@@ -232,6 +252,7 @@ def run_arch(arch: str) -> dict:
             for r in reqs:
                 eng.submit(fresh(r))
             ed = eng.run()
+            eng.assert_quiescent()
             sweeps.append(all(ed[r.id].tokens == cd[r.id].tokens
                               for r in reqs))
         out["block_size_invariant"] = all(sweeps)
@@ -312,6 +333,7 @@ def run_fuzz(arch: str, seed: int = 0) -> dict:
             eng.submit(Request(r.id, r.prompt, r.max_new_tokens,
                                eos_id=r.eos_id))
         done = eng.run()
+        eng.assert_quiescent()
         return {r.id: done[r.id].tokens for r in reqs}, eng
 
     for case in range(8):
@@ -350,9 +372,139 @@ def run_fuzz(arch: str, seed: int = 0) -> dict:
     return checks
 
 
+# -- chaos: fault-injection fuzz (tests/test_chaos.py) -----------------------
+
+#: each kind alone, then combined — a schedule that only shrinks the
+#: budget must degrade differently from one that also poisons dispatches
+CHAOS_KIND_CONFIGS = (("budget",), ("poison",), ("cancel",),
+                      ("budget", "poison"),
+                      ("budget", "poison", "cancel"))
+CHAOS_SCHEDULES_PER_CONFIG = 4
+
+
+def _chaos_violation(reqs, done, ref, eng) -> "str | None":
+    """First violated chaos invariant, or None when all hold: every id
+    resolves with a valid status, completed streams are bit-identical
+    to the fault-free reference, cancelled/failed streams are prefixes
+    of it, rejected streams are empty, nothing hit the iteration cap,
+    and the engine drained to quiescence."""
+    for r in reqs:
+        if r.id not in done:
+            return f"request {r.id} dropped"
+        c = done[r.id]
+        if c.status not in COMPLETION_STATUSES:
+            return f"request {r.id}: unknown status {c.status!r}"
+        if c.reason == "max_iters":
+            return f"request {r.id}: engine wedged (max_iters)"
+        if c.status == "completed" and c.tokens != ref[r.id]:
+            return f"request {r.id}: completed stream diverged"
+        if c.status in ("cancelled", "failed") \
+                and c.tokens != ref[r.id][:len(c.tokens)]:
+            return f"request {r.id}: {c.status} stream not a prefix"
+        if c.status == "rejected" and c.tokens:
+            return f"request {r.id}: rejected with tokens"
+    try:
+        eng.assert_quiescent()
+    except AssertionError as e:
+        return f"not quiescent: {e}"
+    return None
+
+
+def run_chaos(arch: str, seeds) -> dict:
+    """Random fault schedules — every kind alone and combined — replay
+    at megastep N in {1, 8} against one fault-free reference; the pool
+    is tight enough (12 blocks) that budget shrinks actually bite."""
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    shared = Stepper(api)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(3, 9))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(3, 9)))
+            for i in range(6)]
+    probe = BlockKVCache(cfg, 0, block_size=BLOCK)
+    hbm = int((12 * probe.block_bytes
+               + MAX_BATCH * probe.state_bytes) / 0.6) + 1
+
+    def play(megastep, faults, requests, budget=hbm):
+        eng = ContinuousEngine(api, params, hbm_budget_bytes=budget,
+                               max_batch=MAX_BATCH, block_size=BLOCK,
+                               max_context=MAX_CONTEXT, stepper=shared,
+                               megastep=megastep, faults=faults,
+                               retry_backoff_s=0.0)
+        for r in requests:
+            eng.submit(Request(r.id, r.prompt, r.max_new_tokens))
+        return eng.run(max_iters=2000), eng
+
+    ref_done, ref_eng = play(1, None, reqs)
+    ref_eng.assert_quiescent()
+    ref = {r.id: ref_done[r.id].tokens for r in reqs}
+    full_budget = ref_eng.kv.budget
+
+    out = {"schedules": 0, "runs": 0, "violations": []}
+    for seed in seeds:
+        for ci, kinds in enumerate(CHAOS_KIND_CONFIGS):
+            for si in range(CHAOS_SCHEDULES_PER_CONFIG):
+                plane = FaultPlane.random(
+                    int(seed) * 1000 + ci * 100 + si,
+                    budget_bytes=full_budget,
+                    request_ids=[r.id for r in reqs],
+                    max_batch=MAX_BATCH, kinds=kinds)
+                out["schedules"] += 1
+                for m in (1, 8):
+                    done, eng = play(m, plane, reqs)
+                    out["runs"] += 1
+                    bad = _chaos_violation(reqs, done, ref, eng)
+                    if bad:
+                        out["violations"].append(
+                            {"seed": int(seed), "kinds": list(kinds),
+                             "schedule": si, "megastep": m,
+                             "why": bad})
+    out["ok"] = not out["violations"]
+
+    # satellite: cancelling a request MID-STREAM — both between
+    # megasteps ("start") and right after a megastep bulk-reserved its
+    # blocks ("post_reserve") — leaves every surviving row's stream
+    # bit-identical across N in {1, 8}; the victim keeps a nonempty
+    # strict prefix (proving the cancel landed mid-stream, not before
+    # admission or after completion)
+    s4 = [Request(50 + i, rng.integers(0, cfg.vocab_size, 6)
+                  .astype(np.int32), max_new_tokens=24)
+          for i in range(3)]
+    victim = s4[0].id
+
+    def play4(megastep, faults):
+        done, eng = play(megastep, faults, s4, budget=1 << 30)
+        eng.assert_quiescent()
+        return done
+
+    ref4_done = play4(1, None)
+    ref4 = {r.id: ref4_done[r.id].tokens for r in s4}
+    plane_start = FaultPlane([FaultEvent(3, "cancel",
+                                         request_id=victim)])
+    plane_pr = FaultPlane([FaultEvent(3, "cancel", request_id=victim,
+                                      when="post_reserve")])
+    cancel_runs = [play4(1, plane_start), play4(8, plane_start),
+                   play4(8, plane_pr)]
+    out["cancel_survivors_identical"] = all(
+        d[r.id].tokens == ref4[r.id]
+        for d in cancel_runs for r in s4[1:])
+    out["cancel_victim_mid_stream"] = all(
+        d[victim].status == "cancelled"
+        and 0 < len(d[victim].tokens) < len(ref4[victim])
+        and d[victim].tokens == ref4[victim][:len(d[victim].tokens)]
+        for d in cancel_runs)
+    return out
+
+
 if __name__ == "__main__":
     args = sys.argv[1:]
     if args and args[0] == "--fuzz":
         print(json.dumps({arch: run_fuzz(arch) for arch in args[1:]}))
+    elif args and args[0] == "--chaos":
+        seeds = [int(s) for s in args[2:]] or [0]
+        print(json.dumps({args[1]: run_chaos(args[1], seeds)}))
     else:
         print(json.dumps({arch: run_arch(arch) for arch in args}))

@@ -14,7 +14,8 @@ BASE = {
     "workload": {"requests": 9, "max_batch": 4, "block_size": 4,
                  "max_context": 32, "seed": 0, "megastep": 8},
     "round": {"dispatches_per_token": 0.68, "tok_per_s": 100.0},
-    "continuous": {"dispatches_per_token": 0.13, "tok_per_s": 170.0},
+    "continuous": {"dispatches_per_token": 0.13, "tok_per_s": 170.0,
+                   "degraded_activations": 0},
     "megastep": {"n1": {"dispatches_per_token": 0.39},
                  "n4": {"dispatches_per_token": 0.17},
                  "n8": {"dispatches_per_token": 0.13},
@@ -91,6 +92,22 @@ def test_gate_fails_megastep_regressions():
     missing = copy.deepcopy(BASE)
     del missing["megastep"]
     assert any("megastep" in v for v in gate(BASE, missing, 0.15))
+
+
+def test_gate_fails_degraded_activations():
+    """A fault-free benchmark run must report degraded_activations == 0;
+    a missing counter is itself a failure (it would silently un-gate
+    the robustness check)."""
+    bad = copy.deepcopy(BASE)
+    bad["continuous"]["degraded_activations"] = 2
+    bad["continuous"]["watchdog_trips"] = 1
+    out = gate(BASE, bad, 0.15)
+    assert any("degraded mode" in v for v in out)
+
+    missing = copy.deepcopy(BASE)
+    del missing["continuous"]["degraded_activations"]
+    out = gate(BASE, missing, 0.15)
+    assert any("degraded_activations missing" in v for v in out)
 
 
 def test_gate_rejects_workload_mismatch():

@@ -111,6 +111,7 @@ def test_megastep_respects_preempted_readmission_headroom():
     assert eng.megasteps_with_demoted_waiting > 0, \
         "no megastep ever planned while a demoted request waited"
     assert eng.kv.in_use == 0
+    eng.assert_quiescent()
 
 
 # -- bulk reserve/release accounting -----------------------------------------
@@ -198,6 +199,7 @@ def test_megastep_one_never_fuses():
     done = eng.run()
     assert eng.megasteps == 0
     assert all(len(done[i].tokens) == 4 for i in range(3))
+    eng.assert_quiescent()
 
 
 def test_eos_never_sampled_runs_to_max_new():
@@ -219,3 +221,4 @@ def test_eos_never_sampled_runs_to_max_new():
         done = eng.run()
         assert all(len(done[i].tokens) == 5 for i in range(3)), m
         assert eng.kv.in_use == 0
+        eng.assert_quiescent()

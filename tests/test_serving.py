@@ -199,6 +199,7 @@ def test_more_requests_than_slots_all_complete():
     assert eng.kv.peak_bytes <= eng.kv.budget
     assert eng.kv.in_use == 0                     # everything released
     assert eng.kv.reuse_count > 0                 # slot churn reused blocks
+    eng.assert_quiescent()
 
 
 def test_prefill_only_requests_emit_no_tokens():
@@ -221,6 +222,7 @@ def test_prefill_only_requests_emit_no_tokens():
         assert done[0].tokens == []
         assert len(done[1].tokens) == 3
     assert c_eng.kv.in_use == 0
+    c_eng.assert_quiescent()
 
 
 def test_request_larger_than_max_context_rejected():
@@ -294,6 +296,7 @@ def test_iteration_level_backfill_beats_rounds_on_dispatches():
     c_tok = sum(len(c.tokens) for c in cd.values())
     assert r_tok == c_tok == 3 * 18 + 6 * 4
     assert c_eng.dispatches / c_tok < r_eng.dispatches / r_tok
+    c_eng.assert_quiescent()
 
 
 # -- incremental selection (scheduler API) ------------------------------------
