@@ -29,11 +29,22 @@ Metrics and how they are compared:
   exceed baseline by more than the threshold.
 * stream identity (``identical_streams``) must not regress from true
   to false.
-* robustness: ``continuous.degraded_activations`` must be present in
+* robustness: ``telemetry.degraded_activations`` must be present in
   the fresh report and be exactly 0 — a fault-free benchmark run that
   trips the NaN watchdog, falls back from a megastep, retries a
   dispatch or fails a row is a correctness regression, and a report
-  missing the counter would silently un-gate it.
+  missing the counter would silently un-gate it.  Per-cause detail
+  comes from the embedded metrics snapshot (``telemetry.counters``).
+* telemetry plane: ``telemetry.tracing_invisible`` must be true (the
+  traced re-run reproduced the untraced run bit-identically) and the
+  disabled-recorder overhead (``telemetry.overhead.
+  frac_of_token_wall``) must stay under 2 % of the per-token wall.
+
+Forward compatibility: the gate only inspects the sections it names —
+a fresh report carrying EXTRA top-level sections or extra workload
+keys passes (new benchmarks may grow the report before the committed
+baseline is regenerated); a baseline workload key that differs in the
+fresh report still fails loudly.
 
 Exit status 0 = within budget, 1 = regression (each violation printed).
 
@@ -66,9 +77,12 @@ def gate(baseline: dict, fresh: dict, threshold: float,
 
     # dispatches/token and block counts are workload-dependent: a
     # baseline regenerated with a different workload (e.g. full vs
-    # --quick) must fail loudly, not produce a bogus % comparison
+    # --quick) must fail loudly, not produce a bogus % comparison.
+    # Compared key-by-key over the BASELINE's keys so a fresh report
+    # that grows new workload fields stays forward-compatible.
     bw, fw = _get(baseline, "workload"), _get(fresh, "workload")
-    if bw != fw:
+    if not isinstance(bw, dict) or not isinstance(fw, dict) \
+            or any(fw.get(k) != v for k, v in bw.items()):
         bad.append(f"workload mismatch: baseline {bw!r} vs fresh {fw!r} "
                    f"— regenerate the baseline with the same arguments")
         return bad
@@ -129,18 +143,35 @@ def gate(baseline: dict, fresh: dict, threshold: float,
             not _get(fresh, "identical_streams"):
         bad.append("identical_streams regressed true -> false")
     # robustness gate: zero degraded-mode activations on a fault-free
-    # run, and the counter itself must exist in the fresh report
-    da = _get(fresh, "continuous.degraded_activations")
+    # run, and the counter itself must exist in the fresh report.
+    # Reads the telemetry snapshot; counter names contain dots, so the
+    # counters dict is indexed directly instead of via _get's paths.
+    da = _get(fresh, "telemetry.degraded_activations")
+    counters = _get(fresh, "telemetry.counters") or {}
     if da is None:
-        bad.append("continuous.degraded_activations missing from fresh "
+        bad.append("telemetry.degraded_activations missing from fresh "
                    "report — robustness counters not reported")
     elif da != 0:
         bad.append(
             f"fault-free run activated degraded mode {da} time(s): "
-            f"watchdog {_get(fresh, 'continuous.watchdog_trips')}, "
-            f"fallbacks {_get(fresh, 'continuous.megastep_fallbacks')}, "
-            f"retries {_get(fresh, 'continuous.retry_dispatches')}, "
-            f"rows failed {_get(fresh, 'continuous.rows_failed')}")
+            f"watchdog {counters.get('engine.watchdog_trips')}, "
+            f"fallbacks {counters.get('engine.megastep_fallbacks')}, "
+            f"retries {counters.get('engine.retry_dispatches')}, "
+            f"rows failed {counters.get('engine.rows_failed')}")
+    # telemetry-plane gates: tracing must be behavior-invisible, and
+    # the disabled recorder's hot path must stay under 2 % of the
+    # per-token wall — both measured by benchmarks/serving.py
+    if _get(fresh, "telemetry.tracing_invisible") is not True:
+        bad.append("tracing is not behavior-invisible (telemetry."
+                   "tracing_invisible != true): the traced re-run "
+                   "diverged from the untraced run")
+    frac = _get(fresh, "telemetry.overhead.frac_of_token_wall")
+    if frac is None:
+        bad.append("telemetry.overhead.frac_of_token_wall missing from "
+                   "fresh report — recorder overhead not measured")
+    elif frac >= 0.02:
+        bad.append(f"disabled-recorder overhead {frac:.2%} of per-token "
+                   f"wall (budget 2%)")
     if _get(baseline, "shared_prefix.sharing_engaged") and \
             not _get(fresh, "shared_prefix.sharing_engaged"):
         bad.append("prefix sharing no longer engaged")

@@ -221,9 +221,10 @@ def main():
     def mk_round():
         return ServingEngine(api, params, **common)
 
-    def mk_cont(megastep=args.megastep):
+    def mk_cont(megastep=args.megastep, telemetry=None):
         return ContinuousEngine(api, params, block_size=args.block_size,
-                                megastep=megastep, **common)
+                                megastep=megastep, telemetry=telemetry,
+                                **common)
 
     # warm the shared stepper so neither measured engine (nor any
     # request's TTFT) pays compiles: run the REAL workload once through
@@ -250,14 +251,11 @@ def main():
     cont_stats["megastep_steps"] = cont.megastep_steps
     cont_stats["megastep_n"] = cont.megastep_n
     cont_stats["paged"] = cont.paged
+    cont_stats["fused_iterations"] = cont.fused_iterations
     cont_stats["peak_physical_blocks"] = cont.kv.physical_kv_blocks
-    # degraded-mode counters: all MUST be zero on this fault-free run
-    # (run_engine already asserted it; gate.py regresses on the report)
-    cont_stats["watchdog_trips"] = cont.watchdog_trips
-    cont_stats["megastep_fallbacks"] = cont.megastep_fallbacks
-    cont_stats["retry_dispatches"] = cont.retry_dispatches
-    cont_stats["rows_failed"] = cont.rows_failed
-    cont_stats["degraded_activations"] = cont.degraded_activations
+    # degraded-mode counters now live in the telemetry snapshot below
+    # (report["telemetry"]): all MUST be zero on this fault-free run —
+    # run_engine already asserted it; gate.py regresses on the report
 
     # megastep sweep: dispatches/token at N in {1, 4, 8} on the same
     # workload; every N must emit the same bits (deterministic given the
@@ -279,11 +277,45 @@ def main():
     prefix_stats = run_shared_prefix(api, params, shared, cfg, args,
                                      n_requests)
 
+    # tracing-invariance re-run: same workload, same shared stepper,
+    # recorder ON — the telemetry plane's hard contract is that tracing
+    # changes ZERO behavior, so streams, dispatches and iterations must
+    # come back bit-identical to the untraced measured run
+    from repro.runtime.telemetry import SpanRecorder, Telemetry
+    tele = Telemetry(trace=True)
+    traced = mk_cont(telemetry=tele)
+    traced_stats, traced_streams = run_engine(traced, reqs)
+    tracing_invisible = (
+        traced_streams == cont_streams
+        and traced_stats["dispatches"] == cont_stats["dispatches"]
+        and traced.iterations == cont.iterations
+        and traced.fused_iterations == cont.fused_iterations)
+    events = tele.rec.events
+    prefill_wall_s = sum(e.get("dur", 0.0) for e in events
+                         if e["kind"] == "prefill_chunk")
+    decode_wall_s = sum(e.get("dur", 0.0) for e in events
+                        if e["kind"] in ("decode", "megastep"))
+
+    # overhead guard: time the DISABLED recorder's hot path (the exact
+    # span call the decode loop makes) and express it as a fraction of
+    # the measured per-token wall at this run's events/token rate —
+    # gate.py fails the build if tracing-off costs >= 2 % per token
+    rec_off = SpanRecorder(False)
+    calls = 200_000
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        rec_off.span("decode", rec_off.now(), iteration=1, rows=4)
+    per_event_s = (time.perf_counter() - t0) / calls
+    events_per_token = len(events) / max(1, traced_stats["tokens"])
+    token_wall_s = cont_stats["wall_s"] / max(1, cont_stats["tokens"])
+    overhead_frac = per_event_s * events_per_token / token_wall_s
+
     identical = round_streams == cont_streams
     mismatched = sum(a != b
                      for rid in round_streams
                      for a, b in zip(round_streams[rid],
                                      cont_streams[rid]))
+    snap = cont.stats()          # metrics registry snapshot (JSON-safe)
     report = {
         "arch": args.arch,
         "workload": {"requests": n_requests,
@@ -301,6 +333,22 @@ def main():
         "mismatched_tokens": mismatched,
         "speedup_tok_per_s": round(
             cont_stats["tok_per_s"] / round_stats["tok_per_s"], 3),
+        "telemetry": {
+            "pool_highwater_blocks":
+                snap["gauges"]["kv.blocks_live"]["high_water"],
+            "preemptions": cont.preemptions,
+            "prefill_wall_s": round(prefill_wall_s, 4),
+            "decode_wall_s": round(decode_wall_s, 4),
+            "trace_events": len(events),
+            "tracing_invisible": tracing_invisible,
+            "degraded_activations": cont.degraded_activations,
+            "counters": snap["counters"],
+            "overhead": {
+                "per_event_us": round(per_event_s * 1e6, 4),
+                "events_per_token": round(events_per_token, 3),
+                "frac_of_token_wall": round(overhead_frac, 6),
+            },
+        },
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -321,6 +369,11 @@ def main():
           f"/{prefix_stats['prompt_blocks_no_sharing']} prompt blocks "
           f"allocated ({prefix_stats['shared_block_hits']} shared hits, "
           f"engaged: {prefix_stats['sharing_engaged']})")
+    print(f"telemetry: {len(events)} trace events, tracing invisible: "
+          f"{tracing_invisible}, pool high-water "
+          f"{report['telemetry']['pool_highwater_blocks']} blocks, "
+          f"disabled-recorder overhead "
+          f"{overhead_frac * 100:.4f}% of token wall")
     print(f"wrote {args.out}")
 
     if not args.async_dispatch:
@@ -346,6 +399,12 @@ def main():
             f"megastep dispatches/token not monotone: {mega}"
         assert n8 * 2 <= n1, \
             f"megastep N=8 under 2x dispatch reduction: {n8} vs {n1}"
+        assert tracing_invisible, \
+            "tracing changed behavior: streams/dispatches/iterations " \
+            "differ with the recorder on"
+        assert overhead_frac < 0.02, \
+            f"disabled-recorder hot path costs {overhead_frac:.2%} of " \
+            f"the per-token wall (budget 2%)"
     return report
 
 

@@ -33,6 +33,7 @@ import jax
 from ..core.compile import compile_hetero_schedule
 from ..core.executor import LayerTiming, RunResult
 from ..core.plan import ExecutionPlan
+from ..runtime.telemetry import Telemetry
 from .dynamic import DynamicRegionCache
 from .placement import resolve_devices
 from .transfer import TransferPlan, plan_transfers
@@ -43,7 +44,7 @@ class HeteroExecutor:
 
     def __init__(self, plan: ExecutionPlan, *,
                  use_branch_kernel: bool = True, profile: bool = False,
-                 devices=None):
+                 devices=None, telemetry: "Telemetry | None" = None):
         if plan.placement is None:
             raise ValueError("plan has no placement — call "
                              "repro.hetero.heterogenize(plan) first")
@@ -58,15 +59,51 @@ class HeteroExecutor:
         self.transfers = transfers
         self._crossing = transfers.crossing_keys()
         self.dynamic_cache = DynamicRegionCache(plan.graph)
-        self.dispatch_count = 0
-        self.sync_count = 0
-        self.transfer_bytes = 0
-        self.transfer_count = 0
+        # cumulative counters live in the telemetry registry (legacy
+        # names below are a read-only façade); the last_* per-run
+        # scratch stays plain — it is reset every __call__
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._rec = self.telemetry.rec
+        m = self.telemetry.metrics
+        self._m_dispatches = m.counter("hetero.dispatches")
+        self._m_syncs = m.counter("hetero.syncs")
+        self._m_transfer_bytes = m.counter("hetero.transfer_bytes")
+        self._m_transfers = m.counter("hetero.transfers")
+        self._m_per_device: dict = {}      # logical device -> Counter
         self.last_dispatch_count = 0
         self.last_sync_count = 0
         self.last_transfer_bytes = 0
         self.last_transfer_count = 0
         self.last_device_dispatches: dict[tuple, int] = {}
+
+    @property
+    def dispatch_count(self) -> int:
+        return self._m_dispatches.value
+
+    @property
+    def sync_count(self) -> int:
+        return self._m_syncs.value
+
+    @property
+    def transfer_bytes(self) -> int:
+        return self._m_transfer_bytes.value
+
+    @property
+    def transfer_count(self) -> int:
+        return self._m_transfers.value
+
+    def _device_counter(self, device):
+        c = self._m_per_device.get(device)
+        if c is None:
+            tag = "_".join(str(p) for p in device) \
+                if isinstance(device, tuple) else str(device)
+            c = self.telemetry.metrics.counter(f"hetero.dispatches.{tag}")
+            self._m_per_device[device] = c
+        return c
+
+    def stats(self) -> dict:
+        """JSON-safe snapshot of the executor's cumulative counters."""
+        return self.telemetry.metrics.snapshot()
 
     def _block(self, arrays) -> None:
         jax.block_until_ready(arrays)
@@ -83,6 +120,7 @@ class HeteroExecutor:
         env = dict(env)
         placed: dict[tuple, object] = {}   # (tensor, logical dev) -> array
         timings: list[LayerTiming] = []
+        rec = self._rec
         for seg in self.compiled.segments:
             t0 = time.perf_counter()
             dev = self.device_map[seg.device]
@@ -109,6 +147,7 @@ class HeteroExecutor:
             self.last_dispatch_count += 1
             self.last_device_dispatches[seg.device] = (
                 self.last_device_dispatches.get(seg.device, 0) + 1)
+            self._device_counter(seg.device).inc()
             for t, v in zip(seg.out_ids, outs):
                 env[t] = v
                 # outputs are already resident on the segment device: spare
@@ -118,10 +157,15 @@ class HeteroExecutor:
                 self._block(outs)
             timings.append(LayerTiming(seg.layer_index,
                                        time.perf_counter() - t0, seg.width))
+            if rec.enabled:
+                rec.span("segment", t0,
+                         device=str(seg.device),
+                         layer=seg.layer_index,
+                         dynamic=bool(seg.dynamic))
         outs = {t: env[t] for t in graph.outputs}
         self._block(list(outs.values()))
-        self.dispatch_count += self.last_dispatch_count
-        self.sync_count += self.last_sync_count
-        self.transfer_bytes += self.last_transfer_bytes
-        self.transfer_count += self.last_transfer_count
+        self._m_dispatches.inc(self.last_dispatch_count)
+        self._m_syncs.inc(self.last_sync_count)
+        self._m_transfer_bytes.inc(self.last_transfer_bytes)
+        self._m_transfers.inc(self.last_transfer_count)
         return RunResult(outs, timings)

@@ -40,6 +40,7 @@ from repro.models import build_model
 from repro.runtime.engine import (ContinuousEngine, Request,
                                   ServingEngine)
 from repro.runtime.faults import FaultPlane, fault_seed_from_env
+from repro.runtime.telemetry import Telemetry
 
 
 def serve(arch: str, n_requests: int = 8, max_new: int = 16,
@@ -48,10 +49,12 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
           paged: bool = True, megastep: "int | None" = None,
           fault_seed: "int | None" = None,
           max_queue: "int | None" = None,
-          deadline_s: "float | None" = None):
+          deadline_s: "float | None" = None,
+          trace_path: "str | None" = None):
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.key(seed))
+    tele = Telemetry(trace=trace_path is not None)
     if fault_seed is None:
         fault_seed = fault_seed_from_env()
     if engine_mode != "continuous" and (fault_seed is not None
@@ -67,7 +70,7 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
                                   max_batch=max_batch,
                                   max_context=prompt_len + max_new,
                                   paged=paged, megastep=megastep,
-                                  max_queue=max_queue)
+                                  max_queue=max_queue, telemetry=tele)
         if fault_seed is not None:
             # the schedule's budget events are absolute post-margin
             # byte values, so derive them from the pool's real budget
@@ -81,7 +84,7 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
     else:
         engine = ServingEngine(api, params,
                                hbm_budget_bytes=budget_mb << 20,
-                               max_batch=max_batch)
+                               max_batch=max_batch, telemetry=tele)
     rng = np.random.default_rng(seed)
     for i in range(n_requests):
         plen = int(rng.integers(4, prompt_len + 1))
@@ -125,6 +128,10 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
                   f"{engine.cancellations}, rejected {engine.rejected}, "
                   f"budget events {engine.budget_events}")
         engine.assert_quiescent()
+    if trace_path is not None:
+        trace = tele.save_chrome_trace(trace_path)
+        print(f"trace: {len(trace['traceEvents'])} events -> "
+              f"{trace_path} (load in Perfetto / chrome://tracing)")
     return done
 
 
@@ -152,11 +159,17 @@ def main():
                          "are rejected with reason 'queue_full')")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request wall-clock deadline in seconds")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record structured spans and write a Chrome "
+                         "trace-event JSON here (open in Perfetto); "
+                         "recording never alters scheduling — streams "
+                         "and dispatch counts stay bit-identical")
     args = ap.parse_args()
     serve(args.arch, args.requests, args.max_new, args.budget_mb,
           engine_mode=args.engine, paged=not args.dense_cache,
           megastep=args.megastep, fault_seed=args.fault_seed,
-          max_queue=args.max_queue, deadline_s=args.deadline_s)
+          max_queue=args.max_queue, deadline_s=args.deadline_s,
+          trace_path=args.trace)
 
 
 if __name__ == "__main__":

@@ -54,6 +54,7 @@ import numpy as np
 from repro.core.scheduler import greedy_select, incremental_select
 from .kv_cache import BlockKVCache, KVCacheManager, request_peak_bytes
 from .stepper import Stepper
+from .telemetry import Telemetry
 
 MEGASTEP_ENV = "PARALLAX_MEGASTEP"
 MEGASTEP_DEFAULT = 8
@@ -170,7 +171,8 @@ class ServingEngine:
                  max_batch: int = 8, margin: float = 0.4,
                  prefill_chunk: int = 16,
                  max_context: "int | None" = None,
-                 stepper: "Stepper | None" = None):
+                 stepper: "Stepper | None" = None,
+                 telemetry: "Telemetry | None" = None):
         self.api = api
         self.cfg = api.cfg
         self.params = params
@@ -189,19 +191,47 @@ class ServingEngine:
         if stepper is not None and stepper.api is not api:
             raise ValueError("shared stepper built for a different model")
         self.stepper = stepper if stepper is not None else Stepper(api)
-        self.dispatch_count = 0
+        # telemetry plane (runtime/telemetry.py): metrics live in the
+        # registry (attribute names survive as property façades), spans
+        # record only when the caller armed tracing — recording never
+        # feeds back into scheduling, so streams and dispatch counts are
+        # bit-identical with tracing on vs off
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._rec = self.telemetry.rec
+        m = self.telemetry.metrics
+        self._m_dispatches = m.counter("engine.dispatches")
+        self._m_submitted = m.counter("engine.requests_submitted")
+        self._m_resolved = m.counter("engine.requests_resolved")
+        self._h_prompt = m.histogram("engine.prompt_len")
 
     def submit(self, req: Request) -> bool:
         _validate_request(req, self.max_context)
         if any(r.id == req.id for r in self.queue) \
                 or req.id in self.completed:
             raise ValueError(f"duplicate request id {req.id}")
+        self._m_submitted.inc()
+        self._h_prompt.observe(len(req.prompt))
+        self._rec.point("submit", request_id=req.id,
+                        prompt_len=len(req.prompt),
+                        max_new=req.max_new_tokens)
         self.queue.append(req)
         return True
 
     @property
+    def dispatch_count(self) -> int:
+        return self._m_dispatches.value
+
+    @property
     def dispatches(self) -> int:
-        return self.dispatch_count
+        return self._m_dispatches.value
+
+    def stats(self) -> dict:
+        """Deterministic JSON-ready snapshot of every metric (see
+        :meth:`MetricsRegistry.snapshot`) plus the stepper's trace
+        counters."""
+        snap = self.telemetry.metrics.snapshot()
+        snap["stepper"] = self.stepper.trace_stats()
+        return snap
 
     # -- scheduling round ---------------------------------------------------
 
@@ -250,10 +280,12 @@ class ServingEngine:
         lens = np.zeros(B, np.int32)
         first_tok = np.zeros(B, np.int32)
 
+        rec = self._rec
         t0 = time.perf_counter()
         for t in range(0, int(plens.max()), C):
             n_valid = np.clip(plens - t, 0, C)
-            self.dispatch_count += 1
+            self._m_dispatches.inc()
+            t_d = rec.now()
             caches, _, first, _ = self.stepper.prefill_chunk(
                 self.params, caches, toks[:, t:t + C], lens, n_valid)
             done_here = (t < plens) & (plens <= t + C)
@@ -261,6 +293,8 @@ class ServingEngine:
                 first_host = np.asarray(first)
                 first_tok[done_here] = first_host[done_here]
             lens += n_valid
+            rec.span("prefill_chunk", t_d, rows=int((n_valid > 0).sum()),
+                     tokens=int(n_valid.sum()))
         prefill_s = time.perf_counter() - t0
         t_first = time.perf_counter()
         ttft_s = t_first - t_run0
@@ -287,13 +321,15 @@ class ServingEngine:
         t0 = time.perf_counter()
         while (count < max_new).any():
             active = count < max_new
-            self.dispatch_count += 1
+            self._m_dispatches.inc()
+            t_d = rec.now()
             # the round baseline ignores the watchdog flag: it exists to
             # measure the continuous engine against, and its semantics
             # must not drift with the hardening work
             last_dev, _, caches = self.stepper.decode(
                 self.params, caches, last, lens, active)
             last = np.asarray(last_dev)
+            rec.span("decode", t_d, rows=int(active.sum()))
             lens += active
             count += active
             for i, r in enumerate(batch_reqs):
@@ -306,6 +342,9 @@ class ServingEngine:
         for r in batch_reqs:
             comps[r.id].decode_s = decode_s
             self.kv.release(r.id)
+            self._m_resolved.inc()
+            rec.point("complete", request_id=r.id, status="completed",
+                      tokens=len(comps[r.id].tokens))
             self.completed[r.id] = comps[r.id]
 
     def run(self, max_rounds: int = 64) -> "dict[int, Completion]":
@@ -325,13 +364,17 @@ class ServingEngine:
                     f"no queued request fits: smallest peak {smallest} "
                     f"bytes, headroom {self.kv.budget - self.kv.in_use}")
             t_admit = time.perf_counter()
-            for r in batch_reqs:
+            for i, r in enumerate(batch_reqs):
                 self.kv.admit(r.id, r.context_len())
+                self._rec.point("admit", request_id=r.id, slot=i)
             self._run_round(batch_reqs, t_run0, t_admit)
         # the round cap is a liveness backstop, not a silent drop: every
         # request still queued resolves as failed so callers can account
         # for every submitted id
         for r in self.queue:
+            self._m_resolved.inc()
+            self._rec.point("complete", request_id=r.id, status="failed",
+                            reason="max_rounds")
             self.completed[r.id] = Completion(r.id, status="failed",
                                               reason="max_rounds")
         self.queue.clear()
@@ -440,7 +483,8 @@ class ContinuousEngine:
                  faults=None,
                  max_queue: "int | None" = None,
                  dispatch_retries: int = 2,
-                 retry_backoff_s: float = 0.001):
+                 retry_backoff_s: float = 0.001,
+                 telemetry: "Telemetry | None" = None):
         if api.cfg.is_encoder_decoder:
             raise ValueError("ContinuousEngine serves decoder-only "
                              "models (encoder-decoder needs an encoder "
@@ -450,16 +494,26 @@ class ContinuousEngine:
         self.api = api
         self.cfg = api.cfg
         self.params = params
+        # telemetry plane (runtime/telemetry.py): every counter below
+        # lives in the registry — the old attribute names survive as
+        # read-only property façades — and the span recorder is a no-op
+        # unless the caller armed tracing.  Recording never feeds back
+        # into scheduling, so streams and dispatch counts stay
+        # bit-identical with tracing on vs off (the identity child's
+        # --tele sweep asserts it).
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._rec = self.telemetry.rec
+        m = self.telemetry.metrics
         self.kv = BlockKVCache(self.cfg,
                                int(hbm_budget_bytes * (1.0 - margin)),
-                               block_size)
+                               block_size, metrics=m)
         self.max_batch = max_batch
         self.prefill_chunk = max(1, prefill_chunk)
         self.max_context = max_context
         if stepper is not None and stepper.api is not api:
             raise ValueError("shared stepper built for a different model")
         self.stepper = stepper if stepper is not None else Stepper(api)
-        self.dispatch_count = 0
+        self._m_dispatches = m.counter("engine.dispatches")
         self.paged = paged
         # sharing skips recompute of the shared tokens, which is only
         # sound when the WHOLE per-token state lives in the shared KV
@@ -498,8 +552,15 @@ class ContinuousEngine:
 
         self.waiting: "deque[_Seq]" = deque()
         self.completed: dict[int, Completion] = {}
-        self.preemptions = 0
-        self.iterations = 0
+        # scheduling iterations = step() calls.  Under a megastep one
+        # step() fuses up to N decode iterations into one dispatch, so
+        # engine.iterations advances by 1 while engine.fused_iterations
+        # advances by the scan's executed length — fault schedules and
+        # anything else keyed by ``iterations`` target step() calls,
+        # NOT tokens (see runtime/faults.py and tests/test_chaos.py).
+        self._m_iterations = m.counter("engine.iterations")
+        self._m_fused_iterations = m.counter("engine.fused_iterations")
+        self._m_preemptions = m.counter("engine.preemptions")
         self._admit_counter = 0
         self._t0: "float | None" = None
         # fault plane + degradation bookkeeping (runtime/faults.py).
@@ -510,19 +571,24 @@ class ContinuousEngine:
         self.max_queue = max_queue
         self.dispatch_retries = dispatch_retries
         self.retry_backoff_s = retry_backoff_s
-        self.watchdog_trips = 0         # dispatches with >=1 bad row
-        self.megastep_fallbacks = 0     # megasteps discarded -> sync
-        self.retry_dispatches = 0       # extra N=1 retry dispatches
-        self.rows_failed = 0            # rows failed after retries
-        self.rejected = 0               # backpressure rejections
-        self.cancellations = 0          # cancel() + deadline expiries
-        self.budget_events = 0          # runtime budget adjustments
+        self._m_watchdog_trips = m.counter("engine.watchdog_trips")
+        self._m_megastep_fallbacks = m.counter("engine.megastep_fallbacks")
+        self._m_retry_dispatches = m.counter("engine.retry_dispatches")
+        self._m_rows_failed = m.counter("engine.rows_failed")
+        self._m_rejected = m.counter("engine.rejected")
+        self._m_cancellations = m.counter("engine.cancellations")
+        self._m_budget_events = m.counter("engine.budget_events")
+        self._m_submitted = m.counter("engine.requests_submitted")
+        self._m_resolved = m.counter("engine.requests_resolved")
+        self._h_prompt = m.histogram("engine.prompt_len")
+        self._h_generated = m.histogram("engine.generated_tokens")
+        self._h_megastep_len = m.histogram("engine.megastep_len")
         self._deadlines_armed = False
         # decode megastep: N fused iterations per dispatch (1 = the
         # per-iteration path; env PARALLAX_MEGASTEP overrides default)
         self.megastep_n = megastep_from_env(megastep)
-        self.megasteps = 0              # fused dispatches launched
-        self.megastep_steps = 0         # iterations fused into them
+        self._m_megasteps = m.counter("engine.megasteps")
+        self._m_megastep_steps = m.counter("engine.megastep_steps")
         # slot-reset dispatches only exist to clear per-row state that
         # attention masking cannot neutralize (SSM state, conv windows).
         # Attention-only models read nothing but positions t <= cache_len
@@ -543,9 +609,17 @@ class ContinuousEngine:
             # admission/bookkeeping key on request id — a duplicate
             # would admit twice against one charged cost
             raise ValueError(f"duplicate request id {req.id}")
+        self._m_submitted.inc()
+        self._h_prompt.observe(len(req.prompt))
+        self._rec.point("submit", request_id=req.id,
+                        prompt_len=len(req.prompt),
+                        max_new=req.max_new_tokens)
         if self.max_queue is not None \
                 and len(self.waiting) >= self.max_queue:
-            self.rejected += 1
+            self._m_rejected.inc()
+            self._m_resolved.inc()
+            self._rec.point("complete", request_id=req.id,
+                            status="rejected", reason="queue_full")
             self.completed[req.id] = Completion(
                 req.id, status="rejected", reason="queue_full")
             return False
@@ -564,13 +638,13 @@ class ContinuousEngine:
         for seq in self.waiting:
             if seq.req.id == req_id:
                 self.waiting.remove(seq)
-                self.cancellations += 1
+                self._m_cancellations.inc()
                 self._resolve(seq, "cancelled", reason)
                 return True
         for s in range(self.max_batch):
             seq = self.slots[s]
             if seq is not None and seq.req.id == req_id:
-                self.cancellations += 1
+                self._m_cancellations.inc()
                 self._release_slot(s)
                 self._resolve(seq, "cancelled", reason)
                 return True
@@ -591,9 +665,74 @@ class ContinuousEngine:
                     and now - seq.submit_t >= seq.req.deadline_s:
                 self.cancel(seq.req.id, reason="deadline")
 
+    # -- metric façade ------------------------------------------------------
+    # The counters moved into the telemetry registry; these read-only
+    # properties keep every pre-telemetry attribute name working.
+
+    @property
+    def dispatch_count(self) -> int:
+        return self._m_dispatches.value
+
     @property
     def dispatches(self) -> int:
-        return self.dispatch_count
+        return self._m_dispatches.value
+
+    @property
+    def iterations(self) -> int:
+        """Scheduling iterations (= step() calls).  NOT decode
+        iterations: a megastep fuses up to N of those into one step() —
+        see :attr:`fused_iterations`."""
+        return self._m_iterations.value
+
+    @property
+    def fused_iterations(self) -> int:
+        """Decode iterations actually executed, counting every step
+        fused inside a megastep scan: advances by the scan's executed
+        length per megastep and by 1 per sync-path decode dispatch.
+        ``>= iterations``-ish in decode-heavy runs; anything keyed to
+        token-granular timing (e.g. fault schedules) must target
+        :attr:`iterations` at megastep=1 or reason in fused steps."""
+        return self._m_fused_iterations.value
+
+    @property
+    def preemptions(self) -> int:
+        return self._m_preemptions.value
+
+    @property
+    def watchdog_trips(self) -> int:
+        return self._m_watchdog_trips.value
+
+    @property
+    def megastep_fallbacks(self) -> int:
+        return self._m_megastep_fallbacks.value
+
+    @property
+    def retry_dispatches(self) -> int:
+        return self._m_retry_dispatches.value
+
+    @property
+    def rows_failed(self) -> int:
+        return self._m_rows_failed.value
+
+    @property
+    def rejected(self) -> int:
+        return self._m_rejected.value
+
+    @property
+    def cancellations(self) -> int:
+        return self._m_cancellations.value
+
+    @property
+    def budget_events(self) -> int:
+        return self._m_budget_events.value
+
+    @property
+    def megasteps(self) -> int:
+        return self._m_megasteps.value
+
+    @property
+    def megastep_steps(self) -> int:
+        return self._m_megastep_steps.value
 
     @property
     def num_active(self) -> int:
@@ -605,6 +744,21 @@ class ContinuousEngine:
         benchmark asserts it; gate.py regresses on it)."""
         return (self.watchdog_trips + self.megastep_fallbacks
                 + self.retry_dispatches + self.rows_failed)
+
+    def stats(self) -> dict:
+        """Deterministic JSON-ready snapshot: every registry metric
+        (engine.* and kv.* — see :meth:`MetricsRegistry.snapshot`), the
+        derived degraded_activations, and the stepper's trace counters.
+        Values depend only on the workload, never on wall time, so two
+        identical seeded runs snapshot identically (tested)."""
+        snap = self.telemetry.metrics.snapshot()
+        snap["derived"] = {
+            "degraded_activations": self.degraded_activations,
+            "megastep_n": self.megastep_n,
+            "paged": self.paged,
+        }
+        snap["stepper"] = self.stepper.trace_stats()
+        return snap
 
     # -- iteration phases ---------------------------------------------------
 
@@ -658,7 +812,7 @@ class ContinuousEngine:
         if not fresh.any():
             return 0
         if self._needs_reset:
-            self.dispatch_count += 1
+            self._m_dispatches.inc()
             self.caches = self.stepper.reset_rows(self.caches, fresh)
         return int(fresh.sum())
 
@@ -681,6 +835,9 @@ class ContinuousEngine:
         self._admit_counter += 1
         self._refresh_table(slot)
         fresh[slot] = True
+        self._rec.point("admit", request_id=seq.req.id, slot=slot,
+                        iteration=self.iterations, matched=matched,
+                        resumed=seq.preempted)
 
     def _refresh_table(self, slot: int) -> None:
         """Mirror the slot's BlockKVCache table into the np block table
@@ -716,7 +873,8 @@ class ContinuousEngine:
             n_valid[s] = take
             self.kv.check_write(s, int(self.slot_len[s]),
                                 int(self.slot_len[s]) + take)
-        self.dispatch_count += 1
+        self._m_dispatches.inc()
+        t_d = self._rec.now()
         self.caches, _, first, bad_dev = self.stepper.prefill_chunk(
             self.params, self.caches, toks, self.slot_len, n_valid,
             block_tables=self.tables)
@@ -743,10 +901,15 @@ class ContinuousEngine:
                 # sync: a NaN hidden state propagates through the cache
                 # and the decode watchdog backstops it within one
                 # iteration.
-                self.watchdog_trips += 1
+                self._m_watchdog_trips.inc()
+                self._rec.point("fault", iteration=self.iterations,
+                                what="watchdog", where="prefill_chunk",
+                                slot=s)
                 self._fail(s, "poisoned_logits")
                 continue
             self._complete_prefill(s, lambda s=s: int(first_host[0][s]))
+        self._rec.span("prefill_chunk", t_d, iteration=self.iterations,
+                       rows=len(pre), tokens=int(n_valid.sum()))
 
     def _complete_prefill(self, slot: int, get_first_tok) -> None:
         """Prompt fully consumed: flip the slot to DECODE.  Resumed
@@ -804,10 +967,13 @@ class ContinuousEngine:
 
     def _preempt(self, slot: int) -> None:
         seq = self.slots[slot]
+        self._rec.point("preempt", request_id=seq.req.id, slot=slot,
+                        iteration=self.iterations,
+                        tokens=len(seq.gen))
         self._release_slot(slot)
         seq.preempted = True                  # priority re-admission
         self.waiting.appendleft(seq)
-        self.preemptions += 1
+        self._m_preemptions.inc()
 
     def _decode(self, attempts_used: int = 0) -> None:
         """ONE dispatch advances every active slot by one token: decode
@@ -833,18 +999,20 @@ class ContinuousEngine:
         active = decoding | prefilling
         if not active.any():
             return
+        self._m_fused_iterations.inc()        # sync path: 1 iter = 1 tok
         toks = self.slot_last.copy()
         for s in np.flatnonzero(prefilling):
             toks[s] = self._slot_prompt[s][self.slot_off[s]]
         for s in np.flatnonzero(active):
             self.kv.check_write(int(s), int(self.slot_len[s]),
                                 int(self.slot_len[s]) + 1)
+        t_d = self._rec.now()
         attempt = attempts_used
         while True:
             snapshot = self.caches
-            self.dispatch_count += 1
+            self._m_dispatches.inc()
             if attempt > attempts_used:
-                self.retry_dispatches += 1
+                self._m_retry_dispatches.inc()
             nxt, bad_dev, self.caches = self.stepper.decode(
                 self.params, self.caches, toks, self.slot_len, active,
                 block_tables=self.tables, poison=self._poison(attempt))
@@ -852,13 +1020,19 @@ class ContinuousEngine:
             bad = np.asarray(bad_dev)
             if not bad.any():
                 break
-            self.watchdog_trips += 1
+            self._m_watchdog_trips.inc()
+            self._rec.point("fault", iteration=self.iterations,
+                            what="watchdog", where="decode",
+                            attempt=attempt - attempts_used)
             if attempt - attempts_used >= self.dispatch_retries:
                 break        # ladder exhausted: fail the bad rows below
             self.caches = snapshot            # discard poisoned writes
             time.sleep(self.retry_backoff_s
                        * (1 << (attempt - attempts_used)))
             attempt += 1
+        self._rec.span("decode", t_d, iteration=self.iterations,
+                       rows=int(active.sum()),
+                       attempts=attempt - attempts_used + 1)
         self.slot_len += active
         for s in np.flatnonzero(bad):
             self._fail(int(s), "poisoned_logits")
@@ -1006,8 +1180,10 @@ class ContinuousEngine:
             self.kv.check_write(
                 int(s), int(self.slot_len[s]),
                 int(self.slot_len[s]) + min(n, int(budget[s])))
-        self.dispatch_count += 1
-        self.megasteps += 1
+        self._m_dispatches.inc()
+        self._m_megasteps.inc()
+        self._h_megastep_len.observe(n)
+        t_d = self._rec.now()
         snapshot = self.caches                # free O(1) checkpoint
         toks_dev, act_dev, bad_dev, self.caches = self.stepper.megastep(
             self.params, self.caches, self.slot_last, self.slot_len,
@@ -1026,8 +1202,10 @@ class ContinuousEngine:
             # mutated engine state, so the fallback replays the
             # iteration exactly.
             self.caches = snapshot
-            self.watchdog_trips += 1
-            self.megastep_fallbacks += 1
+            self._m_watchdog_trips.inc()
+            self._m_megastep_fallbacks.inc()
+            self._rec.point("fault", iteration=self.iterations,
+                            what="watchdog", where="megastep", n=n)
             for s in np.flatnonzero(active):
                 self._release_reservation(int(s))
             self._grow_or_preempt()
@@ -1035,7 +1213,12 @@ class ContinuousEngine:
             return
         now = time.perf_counter()             # post-reconciliation stamp
         steps = act_out.sum(axis=0).astype(np.int32)
-        self.megastep_steps += int(steps.max())
+        executed = int(steps.max())
+        self._m_megastep_steps.inc(executed)
+        self._m_fused_iterations.inc(executed)
+        self._rec.span("megastep", t_d, iteration=self.iterations,
+                       n=n, executed=executed, rows=int(active.sum()))
+        t_r = self._rec.now()
         self.slot_len += steps
         for s in np.flatnonzero(active):
             s = int(s)
@@ -1080,6 +1263,8 @@ class ContinuousEngine:
                        if self.slot_phase[s] == PREFILL else 0)
             if self.kv.release_to(s, keep):
                 self._refresh_table(s)
+        self._rec.span("reconcile", t_r, iteration=self.iterations,
+                       rows=int(active.sum()))
 
     def _release_reservation(self, slot: int) -> None:
         """Return an occupied slot's reserved-but-unwritten blocks —
@@ -1110,6 +1295,12 @@ class ContinuousEngine:
             ttft_admit_s=seq.ttft_admit_s
             if seq.ttft_admit_s is not None else 0.0,
             status=status, reason=reason)
+        self._m_resolved.inc()
+        self._h_generated.observe(len(seq.gen))
+        self._rec.point("complete", request_id=seq.req.id,
+                        iteration=self.iterations,
+                        status=status, reason=reason,
+                        tokens=len(seq.gen))
 
     def _finish(self, slot: int) -> None:
         """Release the slot's cache blocks the iteration it finishes."""
@@ -1121,7 +1312,7 @@ class ContinuousEngine:
         """Fail ONE row (bottom of the degradation ladder), reclaiming
         its blocks; the partial stream rides the Completion."""
         seq = self.slots[slot]
-        self.rows_failed += 1
+        self._m_rows_failed.inc()
         self._release_slot(slot)
         self._resolve(seq, "failed", reason)
 
@@ -1138,7 +1329,22 @@ class ContinuousEngine:
         per-iteration-path decision)."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
-        self.iterations += 1
+        self._m_iterations.inc()
+        rec = self._rec
+        if not rec.enabled:          # no-op fast path: zero clock reads
+            self._step()
+            return
+        t_it = rec.now()
+        try:
+            self._step()
+        finally:
+            rec.span("iteration", t_it, iteration=self.iterations,
+                     kv_blocks=self.kv.live_blocks,
+                     kv_bytes=self.kv.in_use,
+                     active=self.num_active,
+                     waiting=len(self.waiting))
+
+    def _step(self) -> None:
         if self.faults is not None:
             self._apply_faults(self.faults.events_at(self.iterations))
         if self._deadlines_armed:
@@ -1178,9 +1384,11 @@ class ContinuousEngine:
 
     def _apply_faults(self, events) -> None:
         for e in events:
+            self._rec.point("fault", iteration=self.iterations,
+                            **e.span_args())
             if e.kind == "budget":
                 self.kv.set_budget(e.budget_bytes)
-                self.budget_events += 1
+                self._m_budget_events.inc()
             elif e.kind == "cancel":
                 self.cancel(e.request_id, reason="injected_cancel")
 

@@ -92,6 +92,20 @@ class FaultEvent:
             raise ValueError(f"{self.kind} faults only fire at "
                              f"iteration start")
 
+    def span_args(self) -> dict:
+        """Flat JSON-safe args for the telemetry plane's ``fault``
+        instant event: ``what``/``when`` plus the kind-specific fields
+        that are actually set."""
+        args = {"what": self.kind, "when": self.when}
+        if self.kind == "budget":
+            args["budget_bytes"] = self.budget_bytes
+        elif self.kind == "poison":
+            args["rows"] = list(self.rows)
+            args["repeats"] = self.repeats
+        elif self.kind == "cancel":
+            args["request_id"] = self.request_id
+        return args
+
 
 @dataclass(frozen=True)
 class FaultPlane:

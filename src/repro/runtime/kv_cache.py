@@ -31,6 +31,8 @@ import numpy as np
 
 from repro.core.arena import SlabPool, _align
 
+from .telemetry import MetricsRegistry
+
 
 def kv_bytes_per_token(cfg) -> int:
     """Per-token, per-sequence KV bytes (the shape-inference step)."""
@@ -155,7 +157,8 @@ class BlockKVCache:
     position past its shared prefix).
     """
 
-    def __init__(self, cfg, budget_bytes: int, block_size: int = 16):
+    def __init__(self, cfg, budget_bytes: int, block_size: int = 16,
+                 metrics=None):
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.cfg = cfg
@@ -181,9 +184,48 @@ class BlockKVCache:
         self._slab_hash: "dict[int, bytes]" = {}    # slab id -> chain hash
         self._published: "dict[int, int]" = {}      # slot -> #blocks hashed
         self._chain: "dict[int, bytes]" = {}        # slot -> hash at mark
-        self.shared_block_hits = 0    # blocks mapped instead of allocated
-        self.acquired_blocks = 0      # cumulative pool acquisitions
-        self.prompt_blocks_acquired = 0   # admit-time subset (vs growth)
+        # typed metrics (registry shared with the owning engine when
+        # given); legacy counter attributes remain readable as the
+        # property façade below
+        m = metrics if metrics is not None else MetricsRegistry()
+        self.metrics = m
+        self._m_acquired = m.counter("kv.blocks_acquired")
+        self._m_released = m.counter("kv.blocks_released")
+        self._m_shared_hits = m.counter("kv.shared_block_hits")
+        self._m_prompt_acquired = m.counter("kv.prompt_blocks_acquired")
+        self._g_blocks = m.gauge("kv.blocks_live")
+        self._g_bytes = m.gauge("kv.bytes_in_use")
+
+    # -- metric façade (legacy attribute names) -----------------------------
+
+    @property
+    def shared_block_hits(self) -> int:
+        """Blocks mapped to an existing physical block instead of
+        allocated (prefix sharing)."""
+        return self._m_shared_hits.value
+
+    @property
+    def acquired_blocks(self) -> int:
+        """Cumulative pool acquisitions."""
+        return self._m_acquired.value
+
+    @property
+    def prompt_blocks_acquired(self) -> int:
+        """Admit-time subset of ``acquired_blocks`` (vs growth)."""
+        return self._m_prompt_acquired.value
+
+    @property
+    def live_blocks(self) -> int:
+        """Physical KV blocks currently held (shared blocks count
+        once) — the pool-occupancy gauge's instantaneous value."""
+        return len(self._ref)
+
+    def _track(self) -> None:
+        """Refresh the occupancy gauges after any allocation/release;
+        gauges carry a high-water mark, so this is also where peak
+        occupancy is captured."""
+        self._g_blocks.set(len(self._ref))
+        self._g_bytes.set(self.in_use)
 
     # -- shape inference ----------------------------------------------------
 
@@ -250,7 +292,7 @@ class BlockKVCache:
     def _acquire_block(self):
         slab = self.pool.acquire(self.block_bytes)
         self._ref[slab.id] = 1
-        self.acquired_blocks += 1
+        self._m_acquired.inc()
         return slab
 
     def admit(self, slot: int, n_tokens: int, tokens=None) -> int:
@@ -290,16 +332,17 @@ class BlockKVCache:
                 f"({self.headroom})")
         for slab in shared:
             self._ref[slab.id] += 1
-            self.shared_block_hits += 1
+            self._m_shared_hits.inc()
         self.block_tables[slot] = shared + [self._acquire_block()
                                             for _ in range(fresh)]
-        self.prompt_blocks_acquired += fresh
+        self._m_prompt_acquired.inc(fresh)
         if self.state_bytes:
             self.state_slabs[slot] = \
                 self.state_pool.acquire(self.state_bytes)
         self._published[slot] = len(shared)
         self._chain[slot] = chain          # hash at the published mark
         self._peak = max(self._peak, self.in_use)
+        self._track()
         return len(shared) * self.block_size
 
     def publish(self, slot: int, tokens, n_filled: int) -> None:
@@ -361,6 +404,7 @@ class BlockKVCache:
             return False
         table.extend(self._acquire_block() for _ in range(extra))
         self._peak = max(self._peak, self.in_use)
+        self._track()
         return True
 
     def release_to(self, slot: int, n_tokens: int) -> int:
@@ -386,6 +430,9 @@ class BlockKVCache:
             del self._ref[slab.id]
             self.pool.release(slab)
             freed += 1
+        if freed:
+            self._m_released.inc(freed)
+            self._track()
         return freed
 
     def free(self, slot: int) -> None:
@@ -394,6 +441,7 @@ class BlockKVCache:
         returns to the pool — §3.2 cross-request reuse — only when its
         LAST holder leaves; its hash registration is dropped at the same
         moment (sharing engages among concurrently live requests)."""
+        freed = 0
         for slab in self.block_tables.pop(slot):
             self._ref[slab.id] -= 1
             if self._ref[slab.id] == 0:
@@ -402,11 +450,14 @@ class BlockKVCache:
                 if h is not None:
                     del self._registry[h]
                 self.pool.release(slab)
+                freed += 1
         state = self.state_slabs.pop(slot, None)
         if state is not None:
             self.state_pool.release(state)
         self._published.pop(slot, None)
         self._chain.pop(slot, None)
+        self._m_released.inc(freed)
+        self._track()
 
     def assert_quiescent(self) -> None:
         """Assert the pool is fully drained: no live block tables or

@@ -45,6 +45,7 @@ import numpy as np
 
 from .sampling import (greedy_serving, logits_watchdog, megastep_advance,
                        poison_logits, select_tokens)
+from .telemetry import MetricsRegistry
 
 
 def _device(x, dtype):
@@ -69,20 +70,28 @@ class Stepper:
     def __init__(self, api):
         self.api = api
         self.cfg = api.cfg
-        self.chunk_traces = 0
-        self.decode_traces = 0
-        self.paged_chunk_traces = 0
-        self.paged_decode_traces = 0
-        self.megastep_traces = 0
-        self.paged_megastep_traces = 0
+        # a Stepper is SHARED across engines (trace reuse), so it owns
+        # its own registry rather than borrowing one engine's; the old
+        # attribute names survive as the property façade below and
+        # engine.stats() merges trace_stats() into its snapshot
+        m = MetricsRegistry()
+        self.metrics = m
+        self._m_chunk_traces = m.counter("stepper.chunk_traces")
+        self._m_decode_traces = m.counter("stepper.decode_traces")
+        self._m_paged_chunk_traces = m.counter("stepper.paged_chunk_traces")
+        self._m_paged_decode_traces = \
+            m.counter("stepper.paged_decode_traces")
+        self._m_megastep_traces = m.counter("stepper.megastep_traces")
+        self._m_paged_megastep_traces = \
+            m.counter("stepper.paged_megastep_traces")
+        # fault-injection twins trace separately (chaos-only): counted
+        # apart so the clean counters' no-retrace assertions stay exact
+        self._m_poisoned_traces = m.counter("stepper.poisoned_traces")
+        self._m_dispatches = m.counter("stepper.dispatches")
         # distinct megastep lengths traced, per flavor: a (flavor, N)
         # re-appearing would mean a RE-trace (tests assert counters ==
         # set sizes, i.e. one trace per distinct scan length)
         self.megastep_sizes: "set[tuple[bool, int]]" = set()
-        # fault-injection twins trace separately (chaos-only): counted
-        # apart so the clean counters' no-retrace assertions stay exact
-        self.poisoned_traces = 0
-        self.dispatches = 0
         self._decode = jax.jit(self._make_decode(paged=False))
         self._chunk = jax.jit(self._make_chunk(paged=False))
         self._decode_paged = jax.jit(self._make_decode(paged=True))
@@ -94,6 +103,48 @@ class Stepper:
         # (sampling.poison_logits) — are built lazily on the first
         # poisoned dispatch: a clean run never compiles injection code
         self._poison_jits: "dict[tuple[str, bool], object]" = {}
+
+    # -- metric façade (legacy attribute names) -----------------------------
+
+    @property
+    def chunk_traces(self) -> int:
+        return self._m_chunk_traces.value
+
+    @property
+    def decode_traces(self) -> int:
+        return self._m_decode_traces.value
+
+    @property
+    def paged_chunk_traces(self) -> int:
+        return self._m_paged_chunk_traces.value
+
+    @property
+    def paged_decode_traces(self) -> int:
+        return self._m_paged_decode_traces.value
+
+    @property
+    def megastep_traces(self) -> int:
+        return self._m_megastep_traces.value
+
+    @property
+    def paged_megastep_traces(self) -> int:
+        return self._m_paged_megastep_traces.value
+
+    @property
+    def poisoned_traces(self) -> int:
+        return self._m_poisoned_traces.value
+
+    @property
+    def dispatches(self) -> int:
+        return self._m_dispatches.value
+
+    def trace_stats(self) -> dict:
+        """Counter snapshot + traced megastep lengths — merged into
+        ``engine.stats()`` so one snapshot covers the shared stepper."""
+        stats = dict(self.metrics.snapshot()["counters"])
+        stats["megastep_sizes"] = sorted(
+            [list(k) for k in self.megastep_sizes])
+        return stats
 
     def _poisoned(self, kind: str, paged: bool):
         key = (kind, paged)
@@ -113,11 +164,11 @@ class Stepper:
         def step(params, caches, toks, lens, active, tables=None,
                  poison=None):
             if poisoned:                     # trace-time side effects
-                self.poisoned_traces += 1
+                self._m_poisoned_traces.inc()
             elif paged:
-                self.paged_decode_traces += 1
+                self._m_paged_decode_traces.inc()
             else:
-                self.decode_traces += 1
+                self._m_decode_traces.inc()
             batch = {"tokens": toks[:, None], "cache_len": lens,
                      "active": active}
             if tables is not None:
@@ -139,7 +190,7 @@ class Stepper:
         the paged twin; ``poison`` (B,) bool routes to the lazily-built
         poisoned twin that NaNs those rows' logits in-trace (fault
         injection — never compiled on clean runs)."""
-        self.dispatches += 1
+        self._m_dispatches.inc()
         args = (params, caches, _device(toks, jnp.int32),
                 _device(lens, jnp.int32), _device(active, bool))
         if poison is not None:
@@ -159,9 +210,9 @@ class Stepper:
 
         def run_chunk(params, caches, toks, lens, n_valid, tables=None):
             if paged:                        # trace-time side effects
-                self.paged_chunk_traces += 1
+                self._m_paged_chunk_traces.inc()
             else:
-                self.chunk_traces += 1
+                self._m_chunk_traces.inc()
             B, C = toks.shape
 
             def step(carry, x):
@@ -195,7 +246,7 @@ class Stepper:
         Returns (caches, new lens, first-token per row — meaningful only
         for rows whose prompt completed inside this chunk, watchdog flag
         per row OR-ed over the chunk's steps)."""
-        self.dispatches += 1
+        self._m_dispatches.inc()
         if block_tables is None:
             return self._chunk(params, caches, _device(toks, jnp.int32),
                                _device(lens, jnp.int32),
@@ -214,12 +265,12 @@ class Stepper:
         def run(params, caches, toks, lens, active, budget, forced,
                 n_forced, eos_ids, tables=None, poison=None):
             if poisoned:                     # trace-time side effects
-                self.poisoned_traces += 1
+                self._m_poisoned_traces.inc()
             else:
                 if paged:
-                    self.paged_megastep_traces += 1
+                    self._m_paged_megastep_traces.inc()
                 else:
-                    self.megastep_traces += 1
+                    self._m_megastep_traces.inc()
                 self.megastep_sizes.add((paged, forced.shape[1]))
             N = forced.shape[1]
 
@@ -274,7 +325,7 @@ class Stepper:
         (B,) bool routes to the lazily-built poisoned twin (fault
         injection at scan step 0; never compiled on clean runs).
         """
-        self.dispatches += 1
+        self._m_dispatches.inc()
         args = (params, caches, _device(toks, jnp.int32),
                 _device(lens, jnp.int32), _device(active, bool),
                 _device(budget, jnp.int32), _device(forced, jnp.int32),
@@ -322,5 +373,5 @@ class Stepper:
         tenant must see exactly the state `init_caches` would give it
         (SSM state / conv windows are carried outside the masked KV
         region, so stale tenants would otherwise leak through)."""
-        self.dispatches += 1
+        self._m_dispatches.inc()
         return self._reset(caches, _device(fresh, bool))

@@ -12,6 +12,7 @@ runtime/engine.py for the full determinism contract.
 Usage: python serving_identity_child.py <arch> [<arch> ...]
        python serving_identity_child.py --fuzz <arch> [<arch> ...]
        python serving_identity_child.py --chaos <arch> [<seed> ...]
+       python serving_identity_child.py --tele <arch> [<arch> ...]
 Prints one JSON object {arch: {...checks...}} on the last stdout line.
 
 ``--fuzz`` runs the megastep termination fuzz instead of the identity
@@ -26,6 +27,13 @@ dispatches, cancellations — each kind alone and combined) replay at
 megastep N in {1, 8} against a fault-free reference, asserting every
 submitted id resolves, completed streams stay bit-identical, partial
 streams are prefixes, and the engine drains to quiescence every run.
+
+``--tele`` runs the tracing-invariance sweep (tests/test_telemetry.py):
+the telemetry plane's hard contract is that arming the span recorder
+changes ZERO behavior — the same workload replayed with tracing ON
+must emit bit-identical streams and identical dispatch/iteration
+counts at megastep N in {1, 8} and on the round engine, and the
+recorded events must export to valid Chrome trace-event JSON.
 """
 
 import json
@@ -499,8 +507,92 @@ def run_chaos(arch: str, seeds) -> dict:
     return out
 
 
+def run_tele(arch: str) -> dict:
+    """Tracing-invariance sweep — the telemetry plane's hard contract:
+    arming the span recorder changes ZERO behavior.  For megastep N in
+    {1, 8} (sync decode path and fused scan) and for the round engine,
+    the same workload runs untraced and traced on one shared stepper;
+    streams, dispatch counts and iteration counters must come back
+    bit-identical, and the recorded events must export to valid Chrome
+    trace-event JSON carrying the expected span kinds."""
+    from repro.runtime.telemetry import Telemetry, validate_chrome_trace
+
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    reqs = mixed_requests(cfg)
+    shared = Stepper(api)
+
+    def fresh(r):
+        return Request(r.id, r.prompt, r.max_new_tokens, r.eos_id)
+
+    def mk_cont(megastep, telemetry=None):
+        return ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
+                                max_batch=MAX_BATCH, block_size=BLOCK,
+                                max_context=MAX_CONTEXT, stepper=shared,
+                                megastep=megastep, telemetry=telemetry)
+
+    out = {}
+    for m in (1, 8):
+        base = mk_cont(m)
+        tele = Telemetry(trace=True)
+        traced = mk_cont(m, telemetry=tele)
+        for r in reqs:
+            base.submit(fresh(r))
+            traced.submit(fresh(r))
+        bd, td = base.run(), traced.run()
+        base.assert_quiescent()
+        traced.assert_quiescent()
+        out[f"m{m}_identical"] = all(bd[r.id].tokens == td[r.id].tokens
+                                     for r in reqs)
+        out[f"m{m}_dispatches_equal"] = \
+            base.dispatches == traced.dispatches
+        out[f"m{m}_iterations_equal"] = (
+            base.iterations == traced.iterations
+            and base.fused_iterations == traced.fused_iterations)
+        require = ("iteration", "kv_pool",
+                   "megastep" if m == 8 else "decode")
+        try:
+            validate_chrome_trace(tele.chrome_trace(),
+                                  require_names=require)
+            out[f"m{m}_trace_valid"] = True
+        except ValueError as e:
+            out[f"m{m}_trace_valid"] = False
+            out[f"m{m}_trace_error"] = str(e)
+        out[f"m{m}_span_kinds"] = sorted(
+            {e["kind"] for e in tele.rec.events})
+
+    r_base = ServingEngine(api, params, hbm_budget_bytes=1 << 30,
+                           max_batch=MAX_BATCH, max_context=MAX_CONTEXT,
+                           stepper=shared)
+    r_tele = Telemetry(trace=True)
+    r_traced = ServingEngine(api, params, hbm_budget_bytes=1 << 30,
+                             max_batch=MAX_BATCH,
+                             max_context=MAX_CONTEXT, stepper=shared,
+                             telemetry=r_tele)
+    for r in reqs:
+        r_base.submit(fresh(r))
+        r_traced.submit(fresh(r))
+    rbd, rtd = r_base.run(), r_traced.run()
+    out["round_identical"] = all(rbd[r.id].tokens == rtd[r.id].tokens
+                                 for r in reqs)
+    out["round_dispatches_equal"] = \
+        r_base.dispatches == r_traced.dispatches
+    try:
+        validate_chrome_trace(r_tele.chrome_trace(),
+                              require_names=("prefill_chunk", "decode"))
+        out["round_trace_valid"] = True
+    except ValueError as e:
+        out["round_trace_valid"] = False
+        out["round_trace_error"] = str(e)
+    return out
+
+
 if __name__ == "__main__":
     args = sys.argv[1:]
+    if args and args[0] == "--tele":
+        print(json.dumps({arch: run_tele(arch) for arch in args[1:]}))
+        sys.exit(0)
     if args and args[0] == "--fuzz":
         print(json.dumps({arch: run_fuzz(arch) for arch in args[1:]}))
     elif args and args[0] == "--chaos":

@@ -14,8 +14,18 @@ BASE = {
     "workload": {"requests": 9, "max_batch": 4, "block_size": 4,
                  "max_context": 32, "seed": 0, "megastep": 8},
     "round": {"dispatches_per_token": 0.68, "tok_per_s": 100.0},
-    "continuous": {"dispatches_per_token": 0.13, "tok_per_s": 170.0,
-                   "degraded_activations": 0},
+    "continuous": {"dispatches_per_token": 0.13, "tok_per_s": 170.0},
+    "telemetry": {"degraded_activations": 0,
+                  "pool_highwater_blocks": 12,
+                  "preemptions": 0,
+                  "tracing_invisible": True,
+                  "counters": {"engine.watchdog_trips": 0,
+                               "engine.megastep_fallbacks": 0,
+                               "engine.retry_dispatches": 0,
+                               "engine.rows_failed": 0},
+                  "overhead": {"per_event_us": 0.4,
+                               "events_per_token": 2.0,
+                               "frac_of_token_wall": 0.0004}},
     "megastep": {"n1": {"dispatches_per_token": 0.39},
                  "n4": {"dispatches_per_token": 0.17},
                  "n8": {"dispatches_per_token": 0.13},
@@ -99,15 +109,58 @@ def test_gate_fails_degraded_activations():
     a missing counter is itself a failure (it would silently un-gate
     the robustness check)."""
     bad = copy.deepcopy(BASE)
-    bad["continuous"]["degraded_activations"] = 2
-    bad["continuous"]["watchdog_trips"] = 1
+    bad["telemetry"]["degraded_activations"] = 2
+    bad["telemetry"]["counters"]["engine.watchdog_trips"] = 2
     out = gate(BASE, bad, 0.15)
-    assert any("degraded mode" in v for v in out)
+    assert any("degraded mode" in v and "watchdog 2" in v for v in out)
 
     missing = copy.deepcopy(BASE)
-    del missing["continuous"]["degraded_activations"]
+    del missing["telemetry"]["degraded_activations"]
     out = gate(BASE, missing, 0.15)
     assert any("degraded_activations missing" in v for v in out)
+
+
+def test_gate_fails_tracing_divergence():
+    """tracing_invisible is the benchmark-measured form of the hard
+    invariant (traced re-run bit-identical to the untraced run); false
+    OR missing must fail."""
+    for broken in (False, None):
+        bad = copy.deepcopy(BASE)
+        if broken is None:
+            del bad["telemetry"]["tracing_invisible"]
+        else:
+            bad["telemetry"]["tracing_invisible"] = broken
+        out = gate(BASE, bad, 0.15)
+        assert any("tracing" in v for v in out), (broken, out)
+
+
+def test_gate_fails_recorder_overhead():
+    """The disabled recorder's hot path is budgeted at < 2% of
+    per-token wall; at/over budget or unmeasured must fail."""
+    slow = copy.deepcopy(BASE)
+    slow["telemetry"]["overhead"]["frac_of_token_wall"] = 0.05
+    out = gate(BASE, slow, 0.15)
+    assert any("overhead" in v and "budget" in v for v in out)
+
+    exactly_at = copy.deepcopy(BASE)
+    exactly_at["telemetry"]["overhead"]["frac_of_token_wall"] = 0.02
+    assert any("overhead" in v for v in gate(BASE, exactly_at, 0.15))
+
+    unmeasured = copy.deepcopy(BASE)
+    del unmeasured["telemetry"]["overhead"]
+    out = gate(BASE, unmeasured, 0.15)
+    assert any("overhead" in v and "missing" in v for v in out)
+
+
+def test_gate_forward_compatible_with_new_sections():
+    """A fresh report may grow sections/keys the committed baseline
+    lacks (new benchmarks land before the baseline is regenerated) —
+    only a changed value for a BASELINE workload key fails."""
+    grown = copy.deepcopy(BASE)
+    grown["new_benchmark"] = {"metric": 1.0}
+    grown["workload"]["new_knob"] = True
+    grown["telemetry"]["new_counter"] = 7
+    assert gate(BASE, grown, 0.15) == []
 
 
 def test_gate_rejects_workload_mismatch():

@@ -209,8 +209,13 @@ def test_budget_shrink_restore_degrades_not_dies(model):
     lets everything complete full-length."""
     cfg, _, _ = model
     probe = BlockKVCache(cfg, 0, block_size=4)
-    # megastep=1: one token per iteration, so the shrink lands mid-
-    # stream and the pool stays infeasible for several iterations
+    # Fault schedules key on engine.iterations = step() CALLS, not
+    # tokens: at megastep N one step() fuses up to N decode iterations
+    # (engine.fused_iterations advances by the scan's executed length),
+    # so an iteration-keyed fault would land between whole scans.
+    # megastep=1 makes iterations == fused_iterations — one token per
+    # step() — so the shrink lands mid-stream and the pool stays
+    # infeasible for several iterations.
     eng = _engine(model, megastep=1, hbm_budget_bytes=int(
         (12 * probe.block_bytes + 3 * probe.state_bytes) / 0.6) + 1)
     full = eng.kv.budget
