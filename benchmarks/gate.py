@@ -39,6 +39,12 @@ Metrics and how they are compared:
   traced re-run reproduced the untraced run bit-identically) and the
   disabled-recorder overhead (``telemetry.overhead.
   frac_of_token_wall``) must stay under 2 % of the per-token wall.
+* host KV tier: the spill-tier workload must keep the tier effective —
+  ``spill_tier.spill.prefill_tokens_saved`` > 0 with zero
+  ``reprefill_tokens`` (a preemption that recomputes despite host
+  capacity is a tier regression), streams identical across the spill
+  and demote-only variants, and the tokens saved may not fall more
+  than the threshold below baseline.
 
 Forward compatibility: the gate only inspects the sections it names —
 a fresh report carrying EXTRA top-level sections or extra workload
@@ -175,6 +181,28 @@ def gate(baseline: dict, fresh: dict, threshold: float,
     if _get(baseline, "shared_prefix.sharing_engaged") and \
             not _get(fresh, "shared_prefix.sharing_engaged"):
         bad.append("prefix sharing no longer engaged")
+    # host KV tier gates: only armed once the committed baseline
+    # carries the spill_tier section (forward compatibility — see
+    # module docstring), but then the fresh report must keep the tier
+    # effective, not merely present
+    if _get(baseline, "spill_tier") is not None:
+        saved = _get(fresh, "spill_tier.spill.prefill_tokens_saved")
+        if saved is None:
+            bad.append("spill_tier section missing from fresh report — "
+                       "host-tier effectiveness not measured")
+        else:
+            if saved <= 0:
+                bad.append("host tier saved zero prefill tokens on the "
+                           "preemption-heavy workload")
+            rep = _get(fresh, "spill_tier.spill.reprefill_tokens")
+            if rep != 0:
+                bad.append(f"spill run re-prefilled {rep} tokens with "
+                           f"host capacity available")
+            if _get(fresh, "spill_tier.identical_streams") is not True:
+                bad.append("spill and demote-only variants decoded "
+                           "different streams")
+            worse_if_lower("spill_tier.spill.prefill_tokens_saved",
+                           "host-tier prefill tokens saved")
     return bad
 
 

@@ -23,7 +23,12 @@ to the repo root regardless of CWD; override with ``--out``):
 * a **shared-prefix workload**: staggered requests sharing one long
   prompt prefix, demonstrating cross-request prefix sharing — physical
   blocks allocated must come in UNDER the no-sharing bound of
-  requests x prompt blocks, with dispatches/token steady.
+  requests x prompt blocks, with dispatches/token steady,
+* a **spill-tier workload**: a preemption-heavy run under a tight block
+  budget, once with the host KV tier armed (preempted blocks spill and
+  restore — zero re-prefill) and once demote-only (every preemption
+  recomputes); reports ``prefill_tokens_saved``, spill/restore bytes,
+  and tok/s for both, with stream identity across the two asserted.
 
 ``benchmarks/gate.py`` diffs this file against the committed baseline
 in CI and fails the build on regressions.
@@ -170,6 +175,73 @@ def run_shared_prefix(api, params, stepper, cfg, args, n_requests):
     return stats
 
 
+def run_spill_tier(api, params, stepper, cfg, args, n_requests):
+    """Preemption-heavy workload under a tight block budget, run twice:
+    host tier armed (preemptions spill + restore, zero re-prefill) vs
+    demote-only (every preemption recomputes its prefix).  Returns the
+    comparison dict; both variants must decode identical streams —
+    restore is exact and demote-replay is deterministic."""
+    import numpy as np
+
+    from repro.runtime.engine import ContinuousEngine, Request
+    from repro.runtime.kv_cache import BlockKVCache
+
+    rng = np.random.default_rng(args.seed + 2)
+    n = max(8, n_requests // 2)
+    reqs = [Request(2000 + i,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(5, 9)))
+                    .astype(np.int32),
+                    max_new_tokens=int(rng.integers(10, 16)))
+            for i in range(n)]
+    # budget sized so concurrent rows overflow mid-decode: growth
+    # preempts the youngest row, which spills (host tier) or is
+    # discarded (demote-only)
+    probe = BlockKVCache(cfg, 0, block_size=args.block_size)
+    budget = 12 * probe.block_bytes + 1
+
+    def mk(host_pool):
+        return ContinuousEngine(api, params, hbm_budget_bytes=budget,
+                                max_batch=args.max_batch,
+                                prefill_chunk=16,
+                                block_size=args.block_size,
+                                max_context=args.max_context,
+                                stepper=stepper,
+                                megastep=args.megastep,
+                                host_pool=host_pool)
+
+    out = {"requests": n, "budget_blocks": 12}
+    streams = {}
+    for label, pool in (("spill", 64 * probe.block_bytes),
+                        ("demote_only", 0)):
+        warm = mk(pool)          # this workload's scan lengths differ
+        for r in reqs:           # from the mixed workload's — compile
+            warm.submit(Request(r.id, r.prompt, r.max_new_tokens,
+                                r.eos_id))
+        warm.run()
+        eng = mk(pool)
+        stats, streams[label] = run_engine(
+            eng, reqs, repeats=args.repeats, factory=lambda: mk(pool))
+        ctr = eng.kv.metrics
+        out[label] = {
+            "tok_per_s": stats["tok_per_s"],
+            "wall_s": stats["wall_s"],
+            "preemptions": eng.preemptions,
+            "spills": eng.spills,
+            "restores": eng.restores,
+            "prefill_tokens_saved": eng.prefill_tokens_saved,
+            "reprefill_tokens": eng.reprefill_tokens,
+            "spill_bytes": ctr.counter("kv.spill_bytes").value,
+            "restore_bytes": ctr.counter("kv.restore_bytes").value,
+            "host_peak_bytes": eng.kv.host_peak_bytes,
+        }
+        eng.assert_quiescent()
+    out["identical_streams"] = streams["spill"] == streams["demote_only"]
+    out["tok_per_s_vs_demote"] = round(
+        out["spill"]["tok_per_s"] / out["demote_only"]["tok_per_s"], 3)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="stablelm-3b")
@@ -276,6 +348,8 @@ def main():
 
     prefix_stats = run_shared_prefix(api, params, shared, cfg, args,
                                      n_requests)
+    spill_stats = run_spill_tier(api, params, shared, cfg, args,
+                                 n_requests)
 
     # tracing-invariance re-run: same workload, same shared stepper,
     # recorder ON — the telemetry plane's hard contract is that tracing
@@ -329,6 +403,7 @@ def main():
         "continuous": cont_stats,
         "megastep": mega,
         "shared_prefix": prefix_stats,
+        "spill_tier": spill_stats,
         "identical_streams": identical,
         "mismatched_tokens": mismatched,
         "speedup_tok_per_s": round(
@@ -369,6 +444,13 @@ def main():
           f"/{prefix_stats['prompt_blocks_no_sharing']} prompt blocks "
           f"allocated ({prefix_stats['shared_block_hits']} shared hits, "
           f"engaged: {prefix_stats['sharing_engaged']})")
+    sp, dm = spill_stats["spill"], spill_stats["demote_only"]
+    print(f"spill-tier: {sp['spills']} spills / {sp['restores']} "
+          f"restores, {sp['prefill_tokens_saved']} prefill tokens "
+          f"saved ({dm['reprefill_tokens']} replayed demote-only), "
+          f"{sp['spill_bytes']} B out / {sp['restore_bytes']} B back, "
+          f"tok/s x{spill_stats['tok_per_s_vs_demote']} vs demote-only "
+          f"(identical streams: {spill_stats['identical_streams']})")
     print(f"telemetry: {len(events)} trace events, tracing invisible: "
           f"{tracing_invisible}, pool high-water "
           f"{report['telemetry']['pool_highwater_blocks']} blocks, "
@@ -391,6 +473,18 @@ def main():
             "continuous engine did not reduce dispatches/token"
         assert prefix_stats["sharing_engaged"], \
             "prefix sharing allocated the full no-sharing block count"
+        assert sp["spills"] > 0 and sp["restores"] == sp["spills"], \
+            f"spill workload never spilled: {sp}"
+        assert sp["prefill_tokens_saved"] > 0, \
+            f"host tier saved no prefill tokens: {sp}"
+        assert sp["reprefill_tokens"] == 0, \
+            f"re-prefilled {sp['reprefill_tokens']} tokens with host " \
+            f"capacity available"
+        assert dm["reprefill_tokens"] > 0, \
+            "demote-only baseline never re-prefilled (workload not " \
+            "preemption-heavy enough to compare tiers)"
+        assert spill_stats["identical_streams"], \
+            "spill and demote-only variants decoded different streams"
         assert mega["identical_across_n"], \
             "megastep changed decoded streams across N"
         n1 = mega["n1"]["dispatches_per_token"]

@@ -109,7 +109,8 @@ def incremental_select(peak_mems: "dict[int, int]",
                        candidates: "list[int]", budget: int,
                        in_use: int = 0,
                        max_parallel: int = DEFAULT_MAX_PARALLEL,
-                       extra_mems: "dict[int, int] | None" = None):
+                       extra_mems: "dict[int, int] | None" = None,
+                       reclaimable: int = 0):
     """Iteration-granularity §3.3 admission against *live* headroom.
 
     The layer scheduler charges every branch its whole-lifetime peak
@@ -127,12 +128,22 @@ def incremental_select(peak_mems: "dict[int, int]",
     ``budget`` while earlier admissions still hold memory.  That is a
     valid steady state, not an error — nothing fits until the pool
     drains or the budget is restored, so everything defers.
+
+    ``reclaimable`` credits bytes the caller can free ON DEMAND before
+    placement — the serving engine passes the cold KV blocks it could
+    spill to its host tier, so admission no longer defers everything
+    when the device pool is full but the host tier has room.  The
+    caller owns actually reclaiming (spilling) before it places what
+    was selected against the credit.
     """
     if in_use < 0:
         raise ValueError(f"in_use must be >= 0, got {in_use}")
-    if budget - in_use < 0:
+    if reclaimable < 0:
+        raise ValueError(f"reclaimable must be >= 0, got {reclaimable}")
+    headroom = budget - in_use + reclaimable
+    if headroom < 0:
         return [], sorted(candidates)
-    return greedy_select(peak_mems, candidates, budget - in_use,
+    return greedy_select(peak_mems, candidates, headroom,
                          max_parallel, extra_mems=extra_mems)
 
 

@@ -17,6 +17,13 @@ reserves KV blocks for the whole scan up front, reconciling streams,
 admission and unused blocks afterwards.  ``--megastep 1`` restores the
 per-iteration dispatch path (bit-identical streams either way).
 
+``--host-pool BYTES`` (or env ``PARALLAX_HOST_POOL``; K/M/G suffixes,
+e.g. ``512M``) arms the host KV tier: preempted requests spill their
+written cache blocks to a host-memory pool instead of discarding them,
+and re-admission restores the blocks bit-identically — zero re-prefill
+under memory pressure while the tier has capacity.  ``0`` (the
+default) keeps demote-only preemption.
+
 ``--fault-seed S`` (or env ``PARALLAX_FAULT_SEED``) arms the
 fault-injection plane (``runtime/faults.py``) with a deterministic
 random schedule — budget shrink/restore, poisoned dispatches, request
@@ -36,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.core.scheduler import _parse_bytes
 from repro.models import build_model
 from repro.runtime.engine import (ContinuousEngine, Request,
                                   ServingEngine)
@@ -50,7 +58,8 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
           fault_seed: "int | None" = None,
           max_queue: "int | None" = None,
           deadline_s: "float | None" = None,
-          trace_path: "str | None" = None):
+          trace_path: "str | None" = None,
+          host_pool: "int | None" = None):
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.key(seed))
@@ -59,9 +68,10 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
         fault_seed = fault_seed_from_env()
     if engine_mode != "continuous" and (fault_seed is not None
                                         or max_queue is not None
-                                        or deadline_s is not None):
-        raise ValueError("fault plane / backpressure / deadlines harden "
-                         "the continuous engine only "
+                                        or deadline_s is not None
+                                        or host_pool is not None):
+        raise ValueError("fault plane / backpressure / deadlines / host "
+                         "KV tier harden the continuous engine only "
                          "(--engine continuous)")
     faults = None
     if engine_mode == "continuous":
@@ -70,7 +80,8 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
                                   max_batch=max_batch,
                                   max_context=prompt_len + max_new,
                                   paged=paged, megastep=megastep,
-                                  max_queue=max_queue, telemetry=tele)
+                                  max_queue=max_queue, telemetry=tele,
+                                  host_pool=host_pool)
         if fault_seed is not None:
             # the schedule's budget events are absolute post-margin
             # byte values, so derive them from the pool's real budget
@@ -114,6 +125,14 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
               f"({engine.megastep_steps} fused iters, "
               f"N={engine.megastep_n}), "
               f"preemptions {engine.preemptions}")
+        if engine.spill_enabled:
+            print(f"host tier: {engine.spills} spills / "
+                  f"{engine.restores} restores, "
+                  f"{engine.prefill_tokens_saved} prefill tokens saved, "
+                  f"{engine.reprefill_tokens} re-prefilled, host peak "
+                  f"{engine.kv.host_peak_bytes/2**20:.2f} MiB "
+                  f"(pool {engine.kv.host_budget/2**20:.2f} MiB), "
+                  f"stalls {engine.stalls}")
         if faults is not None or max_queue is not None \
                 or deadline_s is not None:
             by_status: "dict[str, int]" = {}
@@ -151,6 +170,10 @@ def main():
                     help="decode iterations fused per dispatch "
                          "(default: env PARALLAX_MEGASTEP, then 8; "
                          "1 = per-iteration dispatch path)")
+    ap.add_argument("--host-pool", default=None, metavar="BYTES",
+                    help="host KV tier pool size (K/M/G suffixes; "
+                         "default: env PARALLAX_HOST_POOL, else 0 = "
+                         "demote-only preemption, no spill)")
     ap.add_argument("--fault-seed", type=int, default=None,
                     help="arm the fault-injection plane with this seed "
                          "(default: env PARALLAX_FAULT_SEED, else off)")
@@ -165,11 +188,14 @@ def main():
                          "recording never alters scheduling — streams "
                          "and dispatch counts stay bit-identical")
     args = ap.parse_args()
+    host_pool = None
+    if args.host_pool is not None:
+        host_pool = _parse_bytes(args.host_pool)
     serve(args.arch, args.requests, args.max_new, args.budget_mb,
           engine_mode=args.engine, paged=not args.dense_cache,
           megastep=args.megastep, fault_seed=args.fault_seed,
           max_queue=args.max_queue, deadline_s=args.deadline_s,
-          trace_path=args.trace)
+          trace_path=args.trace, host_pool=host_pool)
 
 
 if __name__ == "__main__":

@@ -19,10 +19,15 @@ tables over a pool of fixed-size slab blocks, grown lazily and released
 the iteration a request finishes — and admission re-runs the §3.3
 greedy selection *every iteration* against the pool's actual headroom
 (`repro.core.scheduler.incremental_select`).  When growth would exceed
-the budget the engine preempts demote-only: the youngest request is
-paused and requeued (its cache blocks freed, nothing spilled); on
-re-admission its consumed tokens are re-prefilled, which replays the
-identical per-token computation and therefore the identical stream.
+the budget the engine preempts the youngest request: with a host KV
+tier armed (``host_pool`` / env ``PARALLAX_HOST_POOL``) its written
+blocks SPILL to host memory and re-admission RESTORES them — zero
+tokens re-prefilled, bit-identical resumed streams by construction
+(the restored bytes are the captured bytes).  Without the tier (or
+when it is full) preemption demotes-and-discards as before: the
+blocks are freed and re-admission re-prefills the consumed tokens,
+which replays the identical per-token computation and therefore the
+identical stream.
 
 Both engines drive the same pre-traced step functions
 (:class:`~repro.runtime.stepper.Stepper`) with per-row cache positions,
@@ -51,13 +56,15 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheduler import greedy_select, incremental_select
+from repro.core.scheduler import (_parse_bytes, greedy_select,
+                                  incremental_select)
 from .kv_cache import BlockKVCache, KVCacheManager, request_peak_bytes
 from .stepper import Stepper
 from .telemetry import Telemetry
 
 MEGASTEP_ENV = "PARALLAX_MEGASTEP"
 MEGASTEP_DEFAULT = 8
+HOST_POOL_ENV = "PARALLAX_HOST_POOL"
 
 
 def megastep_from_env(explicit: "int | None" = None) -> int:
@@ -79,6 +86,28 @@ def megastep_from_env(explicit: "int | None" = None) -> int:
                 f"megastep length (1 disables fusion)") from None
     if n < 1:
         raise ValueError(f"megastep length must be >= 1, got {n}")
+    return n
+
+
+def host_pool_from_env(explicit: "int | None" = None) -> int:
+    """Resolve the host KV-tier pool size in bytes: an explicit engine
+    argument wins, then the ``PARALLAX_HOST_POOL`` env var (K/M/G/T
+    suffixes, e.g. ``512M``), then 0 — host tier disabled, demote-only
+    preemption exactly as before the tier existed."""
+    if explicit is not None:
+        n = int(explicit)
+    else:
+        raw = os.environ.get(HOST_POOL_ENV)
+        if raw is None or raw == "":
+            return 0
+        try:
+            n = _parse_bytes(raw)
+        except ValueError:
+            raise ValueError(
+                f"{HOST_POOL_ENV}={raw!r}: expected a byte count "
+                f"(supports K/M/G/T suffixes, 0 disables)") from None
+    if n < 0:
+        raise ValueError(f"host pool must be >= 0 bytes, got {n}")
     return n
 
 
@@ -396,6 +425,7 @@ class _Seq:
     admit_t: "float | None" = None     # first admission (pre-preemption)
     preempted: bool = False
     submit_t: "float | None" = None    # deadline_s counts from here
+    written_at_preempt: int = 0        # cache watermark when last demoted
 
     def pending_len(self) -> int:
         """len(pending_prompt()) without materializing it — the per-
@@ -465,7 +495,15 @@ class ContinuousEngine:
     rows fail with ``reason="poisoned_logits"``.  The block-pool budget
     can shrink/restore mid-run (``faults``); the engine preempts and
     refuses growth instead of tripping pool asserts, and stalls rather
-    than raising while a scheduled restore can regain feasibility.
+    than raising while a scheduled restore can regain feasibility —
+    each stalled iteration is counted (``engine.stalls``) and traced
+    with its cause and the pending restore's ETA.  **Host KV tier**
+    (``host_pool`` / env ``PARALLAX_HOST_POOL``, paged attention-only
+    models): preempted and admission-evicted blocks spill to a host
+    byte pool instead of being discarded, and re-admission restores
+    them bit-identically — zero re-prefill under memory pressure while
+    the tier has capacity, with permanent infeasibility raised only
+    when BOTH tiers are exhausted.
     Requests can be cancelled (:meth:`cancel`) or carry deadlines
     (``Request.deadline_s``); admission is bounded (``max_queue``) with
     machine-readable rejections.  All of it is free on the happy path:
@@ -484,7 +522,8 @@ class ContinuousEngine:
                  max_queue: "int | None" = None,
                  dispatch_retries: int = 2,
                  retry_backoff_s: float = 0.001,
-                 telemetry: "Telemetry | None" = None):
+                 telemetry: "Telemetry | None" = None,
+                 host_pool: "int | None" = None):
         if api.cfg.is_encoder_decoder:
             raise ValueError("ContinuousEngine serves decoder-only "
                              "models (encoder-decoder needs an encoder "
@@ -504,9 +543,15 @@ class ContinuousEngine:
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self._rec = self.telemetry.rec
         m = self.telemetry.metrics
+        # host KV tier: only the paged path can spill (the dense cache
+        # has no physical block rows to capture), and BlockKVCache
+        # additionally gates on pure-attention archs (host_enabled)
+        self.host_pool_bytes = host_pool_from_env(host_pool) \
+            if paged else 0
         self.kv = BlockKVCache(self.cfg,
                                int(hbm_budget_bytes * (1.0 - margin)),
-                               block_size, metrics=m)
+                               block_size, metrics=m,
+                               host_budget_bytes=self.host_pool_bytes)
         self.max_batch = max_batch
         self.prefill_chunk = max(1, prefill_chunk)
         self.max_context = max_context
@@ -522,6 +567,10 @@ class ContinuousEngine:
         self.prefix_sharing = (paged and prefix_sharing
                                and self.kv.block_bytes > 0
                                and self.kv.state_bytes == 0)
+        # spill/restore moves whole written-token state through the
+        # host tier, sound under the same conditions as sharing: the
+        # entire per-token state must live in the KV blocks
+        self.spill_enabled = paged and self.kv.host_enabled
         if paged:
             # physical pool rows: every table entry holding a distinct
             # block bounds the ids BlockKVCache can ever issue, so the
@@ -578,6 +627,18 @@ class ContinuousEngine:
         self._m_rejected = m.counter("engine.rejected")
         self._m_cancellations = m.counter("engine.cancellations")
         self._m_budget_events = m.counter("engine.budget_events")
+        # host-tier + stall visibility: spills/restores count slot
+        # movements (kv.* counters carry blocks/bytes); reprefill_tokens
+        # counts tokens replayed after demote-DISCARD re-admissions (0
+        # when every preemption spilled); prefill_tokens_saved counts
+        # tokens a restore brought back without recompute; stalls counts
+        # iterations deliberately idled through a shrunk budget while a
+        # scheduled restore pends (PR 6 stall path, now visible)
+        self._m_spills = m.counter("engine.spills")
+        self._m_restores = m.counter("engine.restores")
+        self._m_reprefill_tokens = m.counter("engine.reprefill_tokens")
+        self._m_saved_tokens = m.counter("engine.prefill_tokens_saved")
+        self._m_stalls = m.counter("engine.stalls")
         self._m_submitted = m.counter("engine.requests_submitted")
         self._m_resolved = m.counter("engine.requests_resolved")
         self._h_prompt = m.histogram("engine.prompt_len")
@@ -639,6 +700,8 @@ class ContinuousEngine:
             if seq.req.id == req_id:
                 self.waiting.remove(seq)
                 self._m_cancellations.inc()
+                if self.spill_enabled:       # reclaim host-tier bytes
+                    self.kv.drop_spill(req_id)
                 self._resolve(seq, "cancelled", reason)
                 return True
         for s in range(self.max_batch):
@@ -727,6 +790,32 @@ class ContinuousEngine:
         return self._m_budget_events.value
 
     @property
+    def spills(self) -> int:
+        return self._m_spills.value
+
+    @property
+    def restores(self) -> int:
+        return self._m_restores.value
+
+    @property
+    def reprefill_tokens(self) -> int:
+        """Tokens replayed through prefill after demote-discard
+        re-admissions — 0 whenever the host tier absorbed every
+        preemption (the chaos suite asserts it)."""
+        return self._m_reprefill_tokens.value
+
+    @property
+    def prefill_tokens_saved(self) -> int:
+        """Tokens restored from the host tier instead of re-prefilled."""
+        return self._m_saved_tokens.value
+
+    @property
+    def stalls(self) -> int:
+        """Iterations deliberately idled through an infeasible (shrunk)
+        budget while a scheduled restore pends."""
+        return self._m_stalls.value
+
+    @property
     def megasteps(self) -> int:
         return self._m_megasteps.value
 
@@ -756,6 +845,8 @@ class ContinuousEngine:
             "degraded_activations": self.degraded_activations,
             "megastep_n": self.megastep_n,
             "paged": self.paged,
+            "spill_enabled": self.spill_enabled,
+            "host_pool_bytes": self.kv.host_budget,
         }
         snap["stepper"] = self.stepper.trace_stats()
         return snap
@@ -779,12 +870,15 @@ class ContinuousEngine:
         for seq in [s for s in self.waiting if s.preempted]:
             if not free:
                 break
-            need = self.kv.bytes_for(seq.pending_len())
+            need = self._resume_need(seq)
             if need > self.kv.budget:
                 if self._budget_may_recover(need):
                     break    # shrunk pool; a scheduled restore covers it
-                # grown past what the whole pool can ever hold: waiting
-                # would block fresh admission forever — fail it now
+                # grown past what the whole DEVICE pool can ever hold:
+                # waiting would block fresh admission forever — fail it
+                # now (a spilled request's need is already discounted to
+                # its restore transfer, so this is genuine infeasibility
+                # of both tiers, not a full host tier)
                 raise MemoryError(
                     f"request {seq.req.id}: resumed cache needs {need} "
                     f"bytes, more than the whole block-pool budget "
@@ -800,15 +894,29 @@ class ContinuousEngine:
             by_id = {seq.req.id: seq for seq in self.waiting}
             costs = {rid: self.kv.bytes_for(seq.pending_len())
                      for rid, seq in by_id.items()}
+            # cold blocks the host tier could absorb count as headroom
+            # (admission no longer defers everything when the device
+            # pool is full but the host tier has room); anything chosen
+            # against that credit is placed only after _spill_for
+            # actually reclaims the bytes
             chosen, _ = incremental_select(
                 costs, list(by_id), self.kv.budget, self.kv.in_use,
-                max_parallel=len(free))
+                max_parallel=len(free),
+                reclaimable=self._reclaimable_bytes())
             chosen_set = set(chosen)
+            placed = set()
             for seq in [s for s in self.waiting
                         if s.req.id in chosen_set]:
+                if not free:
+                    break
+                need = costs[seq.req.id]
+                if need > self.kv.headroom \
+                        and not self._spill_for(need):
+                    break     # reclamation fell short: defer the rest
                 self._place(free.pop(0), seq, fresh)
+                placed.add(seq.req.id)
             self.waiting = deque(s for s in self.waiting
-                                 if s.req.id not in chosen_set)
+                                 if s.req.id not in placed)
         if not fresh.any():
             return 0
         if self._needs_reset:
@@ -818,9 +926,29 @@ class ContinuousEngine:
 
     def _place(self, slot: int, seq: "_Seq", fresh: "np.ndarray") -> None:
         prompt = seq.pending_prompt()
-        matched = self.kv.admit(
-            slot, len(prompt),
-            tokens=prompt if self.prefix_sharing else None)
+        restored = self.spill_enabled and self.kv.has_spill(seq.req.id)
+        if restored:
+            # spilled request: restore its blocks instead of
+            # re-prefilling — matched is the full written watermark
+            matched = self._restore_slot(slot, seq)
+            if matched < len(prompt):
+                # spilled mid-prefill: pre-allocate the rest of the
+                # prompt's blocks exactly like admit (the prefill paths
+                # expect the table to cover the whole prompt); the
+                # bytes were charged by _resume_need, so this holds
+                grew = self.kv.grow(slot, len(prompt))
+                assert grew, "restore admission underestimated need"
+        else:
+            matched = self.kv.admit(
+                slot, len(prompt),
+                tokens=prompt if self.prefix_sharing else None)
+        if seq.preempted:
+            # tokens REPLAYED through prefill: written before the
+            # demotion but recomputed now (prompt tokens past the
+            # watermark are first-time work, not replay).  A spill
+            # round-trip restores exactly the watermark, so it counts 0.
+            self._m_reprefill_tokens.inc(
+                max(0, seq.written_at_preempt - matched))
         self.slots[slot] = seq
         self._slot_prompt[slot] = prompt
         if seq.admit_t is None:           # re-admissions keep the first
@@ -837,7 +965,14 @@ class ContinuousEngine:
         fresh[slot] = True
         self._rec.point("admit", request_id=seq.req.id, slot=slot,
                         iteration=self.iterations, matched=matched,
-                        resumed=seq.preempted)
+                        resumed=seq.preempted, restored=restored)
+        if matched >= len(prompt):
+            # a fully restored decode row: every pending token is back
+            # in the cache and the next input is the already-sampled
+            # seq.gen[-1] — flip straight to DECODE before any dispatch
+            # (only restores reach here: admit's sharing cap keeps
+            # matched strictly below the prompt length)
+            self._complete_prefill(slot, None)
 
     def _refresh_table(self, slot: int) -> None:
         """Mirror the slot's BlockKVCache table into the np block table
@@ -935,8 +1070,9 @@ class ContinuousEngine:
             self._finish(slot)
 
     def _grow_or_preempt(self) -> None:
-        """Lazy block growth, oldest request first; demote-only
-        preemption (pause the youngest, spill nothing) on exhaustion."""
+        """Lazy block growth, oldest request first; on exhaustion the
+        youngest request is preempted — spilled to the host tier when
+        one is armed and has room, demote-discarded otherwise."""
         order = sorted(
             (s for s in range(self.max_batch)
              if self.slot_phase[s] == DECODE),
@@ -967,13 +1103,168 @@ class ContinuousEngine:
 
     def _preempt(self, slot: int) -> None:
         seq = self.slots[slot]
+        seq.written_at_preempt = int(self.slot_len[slot])
+        spilled = self.spill_enabled and self._spill_slot(slot, seq)
         self._rec.point("preempt", request_id=seq.req.id, slot=slot,
                         iteration=self.iterations,
-                        tokens=len(seq.gen))
-        self._release_slot(slot)
+                        tokens=len(seq.gen), spilled=spilled)
+        if not spilled:
+            # host tier disabled or out of room: demote-discard exactly
+            # as before the tier existed (re-admission re-prefills)
+            self._release_slot(slot)
         seq.preempted = True                  # priority re-admission
         self.waiting.appendleft(seq)
         self._m_preemptions.inc()
+
+    # -- host KV tier: spill / restore --------------------------------------
+
+    def _resume_need(self, seq: "_Seq") -> int:
+        """Device bytes re-admitting ``seq`` costs right now: a spilled
+        request pays its restore transfer target (blocks a live slot
+        still registers are shared back for free) plus — when it was
+        spilled MID-prefill — the blocks for the rest of its pending
+        prompt, which placement pre-allocates exactly like admit; a
+        demote-discarded request pays its full pending blocks again."""
+        if self.spill_enabled and self.kv.has_spill(seq.req.id):
+            need = self.kv.restore_bytes(seq.req.id)
+            spilled = self.kv.spilled_tokens(seq.req.id)
+            pend = seq.pending_len()
+            if pend > spilled:
+                need += (self.kv.blocks_for(pend)
+                         - self.kv.blocks_for(spilled)) \
+                    * self.kv.block_bytes
+            return need
+        return self.kv.bytes_for(seq.pending_len())
+
+    def _spill_slot(self, slot: int, seq: "_Seq") -> bool:
+        """Move the slot's written blocks to the host tier: plan, copy
+        device->host, charge the host pool, then free the device blocks
+        (capture strictly precedes the free, so a block is never spilled
+        mid-write or after its row was handed to another tenant).  False
+        when the host tier lacks room — the caller demote-discards."""
+        plan = self.kv.spill_plan(slot, seq.req.id,
+                                  int(self.slot_len[slot]))
+        if plan is None:
+            return False
+        t_d = self._rec.now()
+        data = self._capture_blocks(plan.capture_ids)
+        nbytes = self.kv.commit_spill(plan, data)
+        self._m_spills.inc()
+        self._release_slot(slot)
+        self._rec.span("spill", t_d, request_id=seq.req.id, slot=slot,
+                       iteration=self.iterations,
+                       blocks=len(plan.entries),
+                       transferred=len(plan.capture_ids), bytes=nbytes)
+        return True
+
+    def _restore_slot(self, slot: int, seq: "_Seq") -> int:
+        """Rebuild a spilled request's blocks on device — scheduled at
+        placement, strictly before the row's next dispatch.  Returns the
+        restored token watermark (the resume's ``matched``): zero tokens
+        re-prefilled, and the restored bytes are bit-identical to what
+        was captured, so the resumed stream matches the fault-free one
+        exactly."""
+        t_d = self._rec.now()
+        n_tokens, scatter = self.kv.restore(slot, seq.req.id)
+        if scatter:
+            self._scatter_blocks(scatter)
+        self._m_restores.inc()
+        self._m_saved_tokens.inc(n_tokens)
+        self._rec.span("restore", t_d, request_id=seq.req.id, slot=slot,
+                       iteration=self.iterations,
+                       blocks=len(self.kv.block_tables[slot]),
+                       transferred=len(scatter),
+                       bytes=len(scatter) * self.kv.block_bytes)
+        return n_tokens
+
+    def _capture_blocks(self, ids: "list[int]") -> dict:
+        """Device -> host copy of physical pool rows ``ids``: one gather
+        per paged attention pool (prefix pools gather on axis 0; period
+        pools carry a leading n_rep axis, so axis 1).  Returns
+        ``{slab_id: [per-pool host arrays in traversal order]}`` — the
+        payload layout :meth:`_scatter_blocks` writes back."""
+        out: "dict[int, list]" = {b: [] for b in ids}
+        if not ids:
+            return out
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        for group, axis in (("prefix", 0), ("period", 1)):
+            for c in self.caches[group]:
+                if not (isinstance(c, dict) and "k_pool" in c):
+                    continue
+                for name in ("k_pool", "v_pool"):
+                    rows = np.asarray(jnp.take(c[name], idx, axis=axis))
+                    for j, b in enumerate(ids):
+                        out[b].append(rows[j] if axis == 0
+                                      else rows[:, j])
+        return out
+
+    def _scatter_blocks(self, scatter: "list[tuple]") -> None:
+        """Host -> device: write restored payloads into their (new)
+        physical pool rows, traversing pools in _capture_blocks order.
+        Rebinds ``self.caches`` functionally, like any dispatch."""
+        ids = jnp.asarray(np.asarray([b for b, _ in scatter], np.int32))
+        payloads = [p for _, p in scatter]
+        li = 0
+        new = dict(self.caches)
+        for group, axis in (("prefix", 0), ("period", 1)):
+            rebuilt = []
+            for c in self.caches[group]:
+                if not (isinstance(c, dict) and "k_pool" in c):
+                    rebuilt.append(c)
+                    continue
+                nc = dict(c)
+                for name in ("k_pool", "v_pool"):
+                    vals = np.stack([p[li] for p in payloads],
+                                    axis=0 if axis == 0 else 1)
+                    li += 1
+                    if axis == 0:
+                        nc[name] = nc[name].at[ids].set(
+                            jnp.asarray(vals, nc[name].dtype))
+                    else:
+                        nc[name] = nc[name].at[:, ids].set(
+                            jnp.asarray(vals, nc[name].dtype))
+                rebuilt.append(nc)
+            new[group] = rebuilt
+        self.caches = new
+
+    def _reclaimable_bytes(self) -> int:
+        """Device bytes fresh admission could reclaim by spilling cold
+        decode slots (youngest-first victims, same order as preemption)
+        to the host tier — 0 unless spill is enabled and the host pool
+        can absorb the capture.  Conservative: shared blocks may free
+        less than counted, so placement re-verifies real headroom."""
+        if not self.spill_enabled:
+            return 0
+        total = 0
+        host_room = self.kv.host_headroom
+        for s in range(self.max_batch):
+            if self.slot_phase[s] != DECODE:
+                continue
+            need_host = self.kv.blocks_for(int(self.slot_len[s])) \
+                * self.kv.block_bytes
+            if need_host <= host_room:
+                host_room -= need_host
+                total += len(self.kv.block_tables[s]) \
+                    * self.kv.block_bytes
+        return total
+
+    def _spill_for(self, need: int) -> bool:
+        """Spill youngest decode slots to the host tier until ``need``
+        bytes of device headroom exist; False when reclamation falls
+        short (the admission that asked simply defers)."""
+        if not self.spill_enabled:
+            return False
+        while need > self.kv.headroom:
+            victims = [s for s in range(self.max_batch)
+                       if self.slot_phase[s] == DECODE]
+            if not victims:
+                return False
+            v = max(victims, key=lambda s: self.slot_seq[s])
+            if self.kv.blocks_for(int(self.slot_len[v])) \
+                    * self.kv.block_bytes > self.kv.host_headroom:
+                return False      # host tier cannot absorb the victim
+            self._preempt(v)
+        return True
 
     def _decode(self, attempts_used: int = 0) -> None:
         """ONE dispatch advances every active slot by one token: decode
@@ -1119,7 +1410,7 @@ class ContinuousEngine:
             reserve = 0
             head = next((q for q in self.waiting if q.preempted), None)
             if head is not None:
-                reserve = self.kv.bytes_for(head.pending_len())
+                reserve = self._resume_need(head)
 
             def extra_bytes(n_try: int) -> int:
                 need = 0
@@ -1338,11 +1629,15 @@ class ContinuousEngine:
         try:
             self._step()
         finally:
+            extra = {}
+            if self.kv.host_budget:
+                extra = {"host_blocks": self.kv.host_blocks_live,
+                         "host_bytes": self.kv.host_in_use}
             rec.span("iteration", t_it, iteration=self.iterations,
                      kv_blocks=self.kv.live_blocks,
                      kv_bytes=self.kv.in_use,
                      active=self.num_active,
-                     waiting=len(self.waiting))
+                     waiting=len(self.waiting), **extra)
 
     def _step(self) -> None:
         if self.faults is not None:
@@ -1352,12 +1647,24 @@ class ContinuousEngine:
         admitted = self._admit()
         if self.num_active == 0:
             if admitted == 0 and self.waiting:
-                smallest = min(s.pending_len() for s in self.waiting)
-                need = self.kv.bytes_for(smallest)
+                need = min(self._resume_need(s) for s in self.waiting)
                 if self._budget_may_recover(need):
-                    return    # stall: a scheduled budget restore pends
+                    # stall: a scheduled budget restore pends.  PR 6
+                    # left these iterations invisible — now each one
+                    # counts and (under tracing) reports its cause and
+                    # the restore's ETA, so a wedged-looking run can be
+                    # told apart from a deliberately idling one.
+                    self._m_stalls.inc()
+                    if self._rec.enabled:
+                        self._rec.point(
+                            "stalled", iteration=self.iterations,
+                            cause="budget_shrunk", need_bytes=need,
+                            waiting=len(self.waiting),
+                            restore_eta_iteration=self.faults
+                            .next_budget_recovery(self.iterations, need))
+                    return
                 raise MemoryError(
-                    f"no request fits: smallest pending prompt needs "
+                    f"no request fits: smallest pending need is "
                     f"{need} bytes, budget is {self.kv.budget}")
             if admitted == 0:
                 return
@@ -1421,6 +1728,8 @@ class ContinuousEngine:
                     self._fail(s, "max_iters")
             while self.waiting:
                 seq = self.waiting.popleft()
+                if self.spill_enabled:
+                    self.kv.drop_spill(seq.req.id)
                 self._resolve(seq, "failed", "max_iters")
         return self.completed
 

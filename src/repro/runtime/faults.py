@@ -164,6 +164,17 @@ class FaultPlane:
                if e.kind == "budget" and e.iteration > iteration]
         return max(fut) if fut else None
 
+    def next_budget_recovery(self, iteration: int,
+                             need: int) -> "int | None":
+        """Earliest iteration after ``iteration`` whose budget event
+        sets at least ``need`` bytes — the pending-restore ETA the
+        engine's ``stalled`` telemetry span reports (None when no
+        scheduled event can cover ``need``)."""
+        fut = [e.iteration for e in self.events
+               if e.kind == "budget" and e.iteration > iteration
+               and e.budget_bytes >= need]
+        return min(fut) if fut else None
+
     @property
     def poison_armed(self) -> bool:
         return any(e.kind == "poison" for e in self.events)

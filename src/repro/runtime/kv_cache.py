@@ -20,6 +20,16 @@ Two granularities are provided:
   so blocks freed by one request immediately back another (§3.2
   cross-arena reuse) and admission can run against the pool's *actual*
   headroom instead of lifetime upper bounds.
+
+:class:`BlockKVCache` optionally fronts a **host-memory block tier**
+(``host_budget_bytes > 0``): a preempted slot's written blocks move to
+a refcounted host store (spill) instead of being discarded, and
+re-admission *restores* them — zero re-prefilled tokens, bit-identical
+resumed streams (a device->host->device round trip of same-dtype
+arrays is exact).  The cache plans and accounts the movement
+(spill_plan / commit_spill / restore); the engine owns the actual
+device transfers, mirroring how hetero/transfer.py separates planned
+byte accounting from execution.
 """
 
 from __future__ import annotations
@@ -72,6 +82,51 @@ class CacheLease:
     request_id: int
     slab_id: int
     nbytes: int
+
+
+class _HostEntry:
+    """One block's payload in the host tier, refcounted across the
+    spilled slots that reference it (a prefix block shared by three
+    spilled requests is captured and charged exactly once)."""
+
+    __slots__ = ("data", "refs")
+
+    def __init__(self, data):
+        self.data = data
+        self.refs = 1
+
+
+@dataclass
+class SpillPlan:
+    """A pure plan for moving one slot's written blocks to the host
+    tier: ``entries`` is ``[(key, slab_id, need_capture), ...]`` in
+    block-table order, where ``key`` is the block's chain hash (bytes,
+    registered prefix blocks — dedups across spilled siblings) or a
+    per-request private tuple, and ``need_capture`` marks keys whose
+    payload is not in the host store yet.  Planning allocates nothing;
+    the engine captures ``capture_ids`` device->host and then calls
+    :meth:`BlockKVCache.commit_spill`."""
+
+    slot: int
+    request_id: int
+    n_tokens: int
+    entries: "list[tuple]"
+
+    @property
+    def capture_ids(self) -> "list[int]":
+        return [sid for _, sid, need in self.entries if need]
+
+
+@dataclass
+class _SpillRecord:
+    """Host-tier residency of one preempted request: the block keys in
+    table order plus the publish watermark/chain hash needed to resume
+    bookkeeping exactly where the slot left off."""
+
+    keys: "list"
+    n_tokens: int
+    published: int
+    chain: bytes
 
 
 class KVCacheManager:
@@ -158,9 +213,12 @@ class BlockKVCache:
     """
 
     def __init__(self, cfg, budget_bytes: int, block_size: int = 16,
-                 metrics=None):
+                 metrics=None, host_budget_bytes: int = 0):
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if host_budget_bytes < 0:
+            raise ValueError(f"host budget must be >= 0, "
+                             f"got {host_budget_bytes}")
         self.cfg = cfg
         self.budget = budget_bytes
         self.block_size = block_size
@@ -184,6 +242,18 @@ class BlockKVCache:
         self._slab_hash: "dict[int, bytes]" = {}    # slab id -> chain hash
         self._published: "dict[int, int]" = {}      # slot -> #blocks hashed
         self._chain: "dict[int, bytes]" = {}        # slot -> hash at mark
+        # host block tier: spilled payloads keyed by chain hash (shared
+        # prefix blocks) or a per-request private key — restoring costs
+        # only the blocks no live slot still registers.  Spill/restore
+        # moves whole written-token state, so the tier is only sound
+        # when that state lives entirely in the KV blocks: any per-row
+        # SSM/conv state would be lost by free().  Same gating shape as
+        # prefix sharing (engine mirrors it).
+        self.host_budget = host_budget_bytes
+        self._host: "dict[object, _HostEntry]" = {}
+        self._host_in_use = 0
+        self._host_peak = 0
+        self._spilled: "dict[int, _SpillRecord]" = {}  # request id -> rec
         # typed metrics (registry shared with the owning engine when
         # given); legacy counter attributes remain readable as the
         # property façade below
@@ -195,6 +265,15 @@ class BlockKVCache:
         self._m_prompt_acquired = m.counter("kv.prompt_blocks_acquired")
         self._g_blocks = m.gauge("kv.blocks_live")
         self._g_bytes = m.gauge("kv.bytes_in_use")
+        # host-tier transfer accounting (spill/restore byte counters
+        # feed the telemetry plane's trace; gauges carry high-water)
+        self._m_spilled_blocks = m.counter("kv.blocks_spilled")
+        self._m_restored_blocks = m.counter("kv.blocks_restored")
+        self._m_spill_bytes = m.counter("kv.spill_bytes")
+        self._m_restore_bytes = m.counter("kv.restore_bytes")
+        self._m_spill_shared = m.counter("kv.spill_shared_hits")
+        self._g_host_blocks = m.gauge("kv.host_blocks_live")
+        self._g_host_bytes = m.gauge("kv.host_bytes_in_use")
 
     # -- metric façade (legacy attribute names) -----------------------------
 
@@ -227,6 +306,11 @@ class BlockKVCache:
         self._g_blocks.set(len(self._ref))
         self._g_bytes.set(self.in_use)
 
+    def _track_host(self) -> None:
+        self._host_peak = max(self._host_peak, self._host_in_use)
+        self._g_host_blocks.set(len(self._host))
+        self._g_host_bytes.set(self._host_in_use)
+
     # -- shape inference ----------------------------------------------------
 
     def blocks_for(self, n_tokens: int) -> int:
@@ -248,6 +332,31 @@ class BlockKVCache:
         can never be < 0), so a shrunk pool refuses growth until enough
         blocks drain or the budget is restored."""
         return self.budget - self.in_use
+
+    @property
+    def host_enabled(self) -> bool:
+        """The host block tier is armed and sound for this arch: a
+        positive host budget, block-granular KV, and NO per-row state
+        (SSM/conv state cannot ride the block spill — hybrid archs keep
+        demote-only preemption)."""
+        return (self.host_budget > 0 and self.block_bytes > 0
+                and self.state_bytes == 0)
+
+    @property
+    def host_headroom(self) -> int:
+        return self.host_budget - self._host_in_use
+
+    @property
+    def host_in_use(self) -> int:
+        return self._host_in_use
+
+    @property
+    def host_peak_bytes(self) -> int:
+        return self._host_peak
+
+    @property
+    def host_blocks_live(self) -> int:
+        return len(self._host)
 
     def set_budget(self, budget_bytes: int) -> None:
         """Adjust the pool budget at runtime (co-tenant memory pressure,
@@ -459,6 +568,147 @@ class BlockKVCache:
         self._m_released.inc(freed)
         self._track()
 
+    # -- host block tier (spill / restore) ----------------------------------
+
+    def spill_plan(self, slot: int, request_id: int,
+                   n_tokens: int) -> "SpillPlan | None":
+        """Plan moving the slot's first ``blocks_for(n_tokens)`` blocks
+        (exactly the written watermark — reserved-but-unwritten trailing
+        blocks are never spilled, they just return to the pool) to the
+        host tier.  Pure: allocates and frees nothing.  Returns None
+        when the tier is disabled or lacks room for the payloads not
+        already resident (the engine then demote-discards as before)."""
+        if not self.host_enabled:
+            return None
+        assert request_id not in self._spilled, \
+            f"request {request_id} already spilled"
+        table = self.block_tables[slot]
+        nb = self.blocks_for(n_tokens)
+        assert len(table) >= nb, (len(table), nb)
+        entries: "list[tuple]" = []
+        fresh = 0
+        for i in range(nb):
+            slab = table[i]
+            h = self._slab_hash.get(slab.id)
+            key = h if h is not None else ("p", request_id, i)
+            need = key not in self._host
+            entries.append((key, slab.id, need))
+            fresh += need
+        if fresh * self.block_bytes > self.host_headroom:
+            return None
+        return SpillPlan(slot, request_id, n_tokens, entries)
+
+    def commit_spill(self, plan: "SpillPlan", data: dict) -> int:
+        """Charge the host tier and record the spilled slot.  ``data``
+        maps each ``plan.capture_ids`` slab id to its captured payload
+        (opaque to the cache — the engine read it off the device).
+        Payloads already resident (spilled siblings sharing a prefix)
+        are refcounted, not duplicated — a block shared by three
+        requests spills ONCE.  The caller must still free the slot
+        (``free``) afterwards; returns the bytes newly written to the
+        host tier."""
+        slot, rid = plan.slot, plan.request_id
+        spilled = 0
+        for key, slab_id, need in plan.entries:
+            ent = self._host.get(key)
+            if ent is None:
+                assert need and slab_id in data, \
+                    f"plan/capture mismatch for block {slab_id}"
+                self._host[key] = _HostEntry(data[slab_id])
+                self._host_in_use += self.block_bytes
+                spilled += self.block_bytes
+                self._m_spilled_blocks.inc()
+            else:
+                ent.refs += 1
+                self._m_spill_shared.inc()
+        self._m_spill_bytes.inc(spilled)
+        self._spilled[rid] = _SpillRecord(
+            keys=[k for k, _, _ in plan.entries],
+            n_tokens=plan.n_tokens,
+            published=self._published.get(slot, 0),
+            chain=self._chain.get(slot, b"kv0"))
+        self._track_host()
+        return spilled
+
+    def has_spill(self, request_id: int) -> bool:
+        return request_id in self._spilled
+
+    def spilled_tokens(self, request_id: int) -> int:
+        return self._spilled[request_id].n_tokens
+
+    def restore_bytes(self, request_id: int) -> int:
+        """Device bytes a restore must allocate NOW: blocks whose chain
+        hash a live slot still registers are shared (free); the rest
+        need fresh device blocks.  This is the admission cost of a
+        spilled request — typically far below ``bytes_for``."""
+        rec = self._spilled[request_id]
+        fresh = sum(1 for k in rec.keys
+                    if not (isinstance(k, bytes) and k in self._registry))
+        return fresh * self.block_bytes + self.state_bytes
+
+    def restore(self, slot: int, request_id: int):
+        """Rebuild the slot's device block table from the host tier.
+        Blocks still registered by a live slot are shared (refcounted,
+        no transfer — a shared prefix restores ONCE even across spilled
+        siblings); the rest get fresh device blocks the engine must
+        fill from the returned scatter list.  The publish watermark and
+        chain hash resume exactly where the slot left off, so COW
+        invariants survive the round trip.  Returns ``(n_tokens,
+        scatter)`` with ``scatter = [(slab_id, payload), ...]``."""
+        assert slot not in self.block_tables, f"slot {slot} already live"
+        need = self.restore_bytes(request_id)
+        if need > self.headroom:
+            raise MemoryError(
+                f"request {request_id}: restore needs {need} bytes, "
+                f"headroom is {self.headroom}")
+        rec = self._spilled.pop(request_id)
+        table, scatter = [], []
+        restored = 0
+        for key in rec.keys:
+            ent = self._host[key]
+            slab = self._registry.get(key) \
+                if isinstance(key, bytes) else None
+            if slab is not None:
+                self._ref[slab.id] += 1
+                self._m_shared_hits.inc()
+            else:
+                slab = self._acquire_block()
+                scatter.append((slab.id, ent.data))
+                restored += 1
+                if isinstance(key, bytes):
+                    # re-register restored prefix blocks so spilled
+                    # siblings and later admissions share them again
+                    self._registry[key] = slab
+                    self._slab_hash[slab.id] = key
+            table.append(slab)
+            ent.refs -= 1
+            if ent.refs == 0:
+                del self._host[key]
+                self._host_in_use -= self.block_bytes
+        self.block_tables[slot] = table
+        self._published[slot] = rec.published
+        self._chain[slot] = rec.chain
+        self._m_restored_blocks.inc(restored)
+        self._m_restore_bytes.inc(restored * self.block_bytes)
+        self._peak = max(self._peak, self.in_use)
+        self._track()
+        self._track_host()
+        return rec.n_tokens, scatter
+
+    def drop_spill(self, request_id: int) -> None:
+        """Release a spilled request's host residency without restoring
+        (cancel / deadline / run-cap failure while demoted)."""
+        rec = self._spilled.pop(request_id, None)
+        if rec is None:
+            return
+        for key in rec.keys:
+            ent = self._host[key]
+            ent.refs -= 1
+            if ent.refs == 0:
+                del self._host[key]
+                self._host_in_use -= self.block_bytes
+        self._track_host()
+
     def assert_quiescent(self) -> None:
         """Assert the pool is fully drained: no live block tables or
         state slabs, zero bytes in use, no refcounts, and an empty
@@ -481,6 +731,11 @@ class BlockKVCache:
             "prefix-sharing registry not empty after drain"
         assert not self._published and not self._chain, \
             "publish watermarks outlive their slots"
+        assert not self._spilled, \
+            f"spilled requests never resolved: {sorted(self._spilled)}"
+        assert not self._host and self._host_in_use == 0, \
+            f"host tier still holds {len(self._host)} blocks " \
+            f"({self._host_in_use} bytes)"
 
     def table_ids(self, slot: int) -> "list[int]":
         """The slot's physical block table (slab ids double as pool row

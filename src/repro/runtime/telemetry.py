@@ -18,9 +18,9 @@ that make a serving run diagnosable:
 * **Span recorder** (:class:`SpanRecorder`) — structured events with
   monotonic timestamps, per-request and per-iteration.  The taxonomy is
   fixed (:data:`SPAN_KINDS`): ``submit`` / ``admit`` / ``prefill_chunk``
-  / ``decode`` / ``megastep`` / ``reconcile`` / ``preempt`` / ``fault``
-  / ``complete`` / ``iteration`` (engine) and ``segment`` (hetero
-  executor).  Recording is **disabled by default**: every hook site is
+  / ``decode`` / ``megastep`` / ``reconcile`` / ``preempt`` / ``spill``
+  / ``restore`` / ``stalled`` / ``fault`` / ``complete`` / ``iteration``
+  (engine) and ``segment`` (hetero executor).  Recording is **disabled by default**: every hook site is
   a single ``enabled`` check, ``now()`` returns ``0.0`` without touching
   the clock, and nothing allocates — the disabled hot path is
   micro-benchmarked by ``benchmarks/serving.py`` and gated under 2 % of
@@ -53,19 +53,24 @@ from bisect import bisect_left
 #: Every structured-event kind any component can emit.  The engine emits
 #: all but "segment" (the hetero executor's per-segment span); the
 #: schema check in tests/test_telemetry.py validates every recorded
-#: event against this taxonomy.
+#: event against this taxonomy.  ``spill`` / ``restore`` time the host-
+#: tier block transfers (with block/byte args); ``stalled`` marks an
+#: iteration the engine deliberately idled through a shrunk budget
+#: waiting on a scheduled restore (cause + pending-restore ETA args).
 SPAN_KINDS = ("submit", "admit", "prefill_chunk", "decode", "megastep",
-              "reconcile", "preempt", "fault", "complete", "iteration",
-              "segment")
+              "reconcile", "preempt", "spill", "restore", "stalled",
+              "fault", "complete", "iteration", "segment")
 
 #: Kinds recorded with a duration (``ts`` + ``dur``); the rest are
 #: instantaneous points (``ts`` only).
 DURATION_KINDS = frozenset({"iteration", "prefill_chunk", "decode",
-                            "megastep", "reconcile", "segment"})
+                            "megastep", "reconcile", "spill", "restore",
+                            "segment"})
 POINT_KINDS = frozenset(k for k in SPAN_KINDS if k not in DURATION_KINDS)
 
 #: Kinds that always carry a ``request_id``.
-REQUEST_KINDS = frozenset({"submit", "admit", "preempt", "complete"})
+REQUEST_KINDS = frozenset({"submit", "admit", "preempt", "spill",
+                           "restore", "complete"})
 
 
 def log_buckets(lo: int = 1, hi: int = 1 << 16,
@@ -322,7 +327,9 @@ def chrome_trace(events: "list[dict]") -> dict:
       per-slot residency slice (``"X"``, one tid per slot) so slot
       occupancy reads directly off the per-slot tracks,
     * iteration KV-pool samples → counter events (``ph: "C"``,
-      name ``kv_pool``) — the pool-occupancy time series,
+      name ``kv_pool``) — the pool-occupancy time series — plus a
+      ``kv_host`` counter series (host-tier residency) when the
+      iteration spans carry ``host_blocks`` (host pool armed),
     * ``fault`` → instant events (``ph: "i"``) on the engine track.
 
     Timestamps are exported in microseconds relative to the earliest
@@ -372,6 +379,13 @@ def chrome_trace(events: "list[dict]") -> dict:
                            "pid": PID_ENGINE, "tid": 0,
                            "ts": us(e["ts"] + e.get("dur", 0.0)),
                            "args": {"blocks": args["kv_blocks"]}})
+            if kind == "iteration" and "host_blocks" in args:
+                # host-tier residency time series (present only when
+                # the engine runs with a host pool armed)
+                te.append({"ph": "C", "name": "kv_host",
+                           "pid": PID_ENGINE, "tid": 0,
+                           "ts": us(e["ts"] + e.get("dur", 0.0)),
+                           "args": {"blocks": args["host_blocks"]}})
         elif kind == "submit":
             te.append({"ph": "b", "cat": "request", "id": str(rid),
                        "name": f"req {rid}", "pid": PID_REQUESTS,

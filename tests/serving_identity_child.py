@@ -27,6 +27,10 @@ dispatches, cancellations — each kind alone and combined) replay at
 megastep N in {1, 8} against a fault-free reference, asserting every
 submitted id resolves, completed streams stay bit-identical, partial
 streams are prefixes, and the engine drains to quiescence every run.
+Budget-bearing schedules additionally replay with the host KV tier
+armed (spill/restore): the same invariants must hold — quiescence now
+audits the host tier too — plus ZERO tokens re-prefilled while the
+tier has capacity.
 
 ``--tele`` runs the tracing-invariance sweep (tests/test_telemetry.py):
 the telemetry plane's hard contract is that arming the span recorder
@@ -436,12 +440,12 @@ def run_chaos(arch: str, seeds) -> dict:
     hbm = int((12 * probe.block_bytes
                + MAX_BATCH * probe.state_bytes) / 0.6) + 1
 
-    def play(megastep, faults, requests, budget=hbm):
+    def play(megastep, faults, requests, budget=hbm, host_pool=0):
         eng = ContinuousEngine(api, params, hbm_budget_bytes=budget,
                                max_batch=MAX_BATCH, block_size=BLOCK,
                                max_context=MAX_CONTEXT, stepper=shared,
                                megastep=megastep, faults=faults,
-                               retry_backoff_s=0.0)
+                               retry_backoff_s=0.0, host_pool=host_pool)
         for r in requests:
             eng.submit(Request(r.id, r.prompt, r.max_new_tokens))
         return eng.run(max_iters=2000), eng
@@ -504,6 +508,74 @@ def run_chaos(arch: str, seeds) -> dict:
         and 0 < len(d[victim].tokens) < len(ref4[victim])
         and d[victim].tokens == ref4[victim][:len(d[victim].tokens)]
         for d in cancel_runs)
+
+    # satellite: host-tier spill/restore — replay every budget-bearing
+    # schedule with the host KV tier armed (64 blocks: ample for this
+    # workload, so every preemption can spill).  All the headline chaos
+    # invariants must still hold, quiescence now audits the host tier
+    # too, and additionally ZERO tokens may be re-prefilled: every
+    # budget-shrink preemption spills and every re-admission restores
+    # instead of replaying prefill.
+    spill_supported = probe.block_bytes > 0 and probe.state_bytes == 0
+    out["spill_supported"] = spill_supported
+    out["spill_schedules"] = 0
+    out["spill_runs"] = 0
+    out["spill_violations"] = []
+    out["spill_total_spills"] = 0
+    out["spill_total_restores"] = 0
+    if spill_supported:
+        host_pool = 64 * probe.block_bytes
+        budget_configs = [k for k in CHAOS_KIND_CONFIGS
+                          if "budget" in k]
+        for seed in seeds:
+            for ci, kinds in enumerate(budget_configs):
+                for si in range(CHAOS_SCHEDULES_PER_CONFIG):
+                    plane = FaultPlane.random(
+                        int(seed) * 1000 + ci * 100 + si,
+                        budget_bytes=full_budget,
+                        request_ids=[r.id for r in reqs],
+                        max_batch=MAX_BATCH, kinds=kinds)
+                    out["spill_schedules"] += 1
+                    for m in (1, 8):
+                        done, eng = play(m, plane, reqs,
+                                         host_pool=host_pool)
+                        out["spill_runs"] += 1
+                        assert eng.spill_enabled
+                        bad = _chaos_violation(reqs, done, ref, eng)
+                        if bad is None and eng.reprefill_tokens:
+                            bad = (f"{eng.reprefill_tokens} tokens "
+                                   f"re-prefilled with host capacity")
+                        if bad:
+                            out["spill_violations"].append(
+                                {"seed": int(seed),
+                                 "kinds": list(kinds),
+                                 "schedule": si, "megastep": m,
+                                 "why": bad})
+                        out["spill_total_spills"] += eng.spills
+                        out["spill_total_restores"] += eng.restores
+        # deterministic anchor: a shrink that demotes every slot, then
+        # a scheduled restore — at N in {1, 8} the run must actually
+        # exercise the spill path (not vacuously pass) and come back
+        # bit-identical with zero re-prefill
+        shrink_plane = FaultPlane([
+            FaultEvent(4, "budget", budget_bytes=2 * probe.block_bytes),
+            FaultEvent(10, "budget", budget_bytes=full_budget),
+        ])
+        anchor_ok = True
+        for m in (1, 8):
+            done, eng = play(m, shrink_plane, reqs,
+                             host_pool=host_pool)
+            bad = _chaos_violation(reqs, done, ref, eng)
+            if bad or eng.restores == 0 or eng.reprefill_tokens \
+                    or eng.prefill_tokens_saved == 0:
+                anchor_ok = False
+                out["spill_violations"].append(
+                    {"anchor": True, "megastep": m,
+                     "why": bad or f"restores={eng.restores} "
+                     f"reprefill={eng.reprefill_tokens} "
+                     f"saved={eng.prefill_tokens_saved}"})
+        out["spill_anchor_ok"] = anchor_ok
+    out["spill_ok"] = not out["spill_violations"]
     return out
 
 

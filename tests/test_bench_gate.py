@@ -33,6 +33,12 @@ BASE = {
     "shared_prefix": {"dispatches_per_token": 0.5,
                       "prompt_blocks_acquired": 26,
                       "sharing_engaged": True},
+    "spill_tier": {"spill": {"prefill_tokens_saved": 290,
+                             "reprefill_tokens": 0,
+                             "spills": 35, "restores": 35},
+                   "demote_only": {"reprefill_tokens": 125},
+                   "identical_streams": True,
+                   "tok_per_s_vs_demote": 0.94},
     "identical_streams": True,
     "speedup_tok_per_s": 1.7,
 }
@@ -150,6 +156,37 @@ def test_gate_fails_recorder_overhead():
     del unmeasured["telemetry"]["overhead"]
     out = gate(BASE, unmeasured, 0.15)
     assert any("overhead" in v and "missing" in v for v in out)
+
+
+def test_gate_fails_spill_tier_regressions():
+    """Host-tier gates: zero tokens saved, any re-prefill with host
+    capacity, stream divergence between the spill and demote-only
+    variants, a below-threshold drop in tokens saved, or a missing
+    section must each fail — but only once the committed baseline
+    carries the spill_tier section."""
+    for mutate, needle in (
+        (lambda r: r["spill_tier"]["spill"].update(
+            prefill_tokens_saved=0), "zero prefill tokens"),
+        (lambda r: r["spill_tier"]["spill"].update(
+            reprefill_tokens=7), "re-prefilled 7"),
+        (lambda r: r["spill_tier"].update(identical_streams=False),
+         "different streams"),
+        (lambda r: r["spill_tier"]["spill"].update(
+            prefill_tokens_saved=100), "tokens saved"),  # -66%
+        (lambda r: r.pop("spill_tier"), "spill_tier"),
+    ):
+        bad = copy.deepcopy(BASE)
+        mutate(bad)
+        out = gate(BASE, bad, 0.15)
+        assert any(needle in v for v in out), (needle, out)
+
+    # forward compatibility: a baseline WITHOUT the section gates
+    # nothing even if the fresh report regressed
+    old_base = copy.deepcopy(BASE)
+    del old_base["spill_tier"]
+    regressed = copy.deepcopy(BASE)
+    regressed["spill_tier"]["spill"]["prefill_tokens_saved"] = 0
+    assert gate(old_base, regressed, 0.15) == []
 
 
 def test_gate_forward_compatible_with_new_sections():

@@ -235,6 +235,99 @@ def test_budget_shrink_restore_degrades_not_dies(model):
     eng.assert_quiescent()
 
 
+def test_budget_shrink_spills_and_restores(model):
+    """The same shrink/restore schedule as above, with the host KV tier
+    armed: every demotion spills instead of discarding, every
+    re-admission restores instead of re-prefilling — zero tokens
+    replayed, and the host tier drains to quiescence with the rest."""
+    cfg, _, _ = model
+    probe = BlockKVCache(cfg, 0, block_size=4)
+    eng = _engine(model, megastep=1, hbm_budget_bytes=int(
+        (12 * probe.block_bytes + 3 * probe.state_bytes) / 0.6) + 1,
+        host_pool=64 * probe.block_bytes)
+    assert eng.spill_enabled
+    full = eng.kv.budget
+    eng.faults = FaultPlane([
+        FaultEvent(3, "budget", budget_bytes=2 * probe.block_bytes),
+        FaultEvent(9, "budget", budget_bytes=full),
+    ])
+    for i, p in enumerate(_prompts(cfg, 3, plen=6)):
+        eng.submit(Request(i, p, max_new_tokens=10))
+    done = eng.run()
+    assert all(done[i].ok and len(done[i].tokens) == 10
+               for i in range(3))
+    assert eng.spills > 0 and eng.restores == eng.spills
+    assert eng.reprefill_tokens == 0      # nothing replayed through prefill
+    assert eng.prefill_tokens_saved > 0
+    assert eng.kv.host_peak_bytes > 0
+    assert eng.kv.host_in_use == 0        # tier drained
+    eng.assert_quiescent()                # audits the host tier too
+
+
+def test_spill_falls_back_to_demote_when_host_tier_full(model):
+    """A host pool too small for even one slot's blocks: preemption
+    demote-discards exactly as without the tier — the run still
+    completes (via re-prefill) and never wedges on a full tier."""
+    cfg, _, _ = model
+    probe = BlockKVCache(cfg, 0, block_size=4)
+    eng = _engine(model, megastep=1, hbm_budget_bytes=int(
+        (12 * probe.block_bytes + 3 * probe.state_bytes) / 0.6) + 1,
+        host_pool=1)                      # 1 byte: nothing ever fits
+    assert eng.spill_enabled              # armed, but no capacity
+    full = eng.kv.budget
+    eng.faults = FaultPlane([
+        FaultEvent(3, "budget", budget_bytes=2 * probe.block_bytes),
+        FaultEvent(9, "budget", budget_bytes=full),
+    ])
+    for i, p in enumerate(_prompts(cfg, 3, plen=6)):
+        eng.submit(Request(i, p, max_new_tokens=10))
+    done = eng.run()
+    assert all(done[i].ok and len(done[i].tokens) == 10
+               for i in range(3))
+    assert eng.spills == 0 and eng.restores == 0
+    assert eng.reprefill_tokens > 0       # demote path replayed tokens
+    eng.assert_quiescent()
+
+
+def test_stall_iterations_are_visible(model):
+    """PR 6 made the engine stall (not raise) through a shrunk budget
+    while a restore pends — but the stall was invisible.  Now every
+    stalled iteration counts in engine.stalls / stats()."""
+    cfg, _, _ = model
+    probe = BlockKVCache(cfg, 0, block_size=4)
+    eng = _engine(model, megastep=1, hbm_budget_bytes=int(
+        (12 * probe.block_bytes + 3 * probe.state_bytes) / 0.6) + 1,
+        host_pool=64 * probe.block_bytes)
+    full = eng.kv.budget
+    eng.faults = FaultPlane([
+        FaultEvent(3, "budget", budget_bytes=1),   # below one block
+        FaultEvent(9, "budget", budget_bytes=full),
+    ])
+    for i, p in enumerate(_prompts(cfg, 3, plen=6)):
+        eng.submit(Request(i, p, max_new_tokens=10))
+    done = eng.run()
+    assert all(done[i].ok for i in range(3))
+    assert eng.stalls > 0
+    assert eng.stats()["counters"]["engine.stalls"] == eng.stalls
+    eng.assert_quiescent()
+
+
+def test_host_pool_env_knob(monkeypatch):
+    from repro.runtime.engine import HOST_POOL_ENV, host_pool_from_env
+    monkeypatch.delenv(HOST_POOL_ENV, raising=False)
+    assert host_pool_from_env() == 0          # unset: tier disabled
+    assert host_pool_from_env(1 << 20) == 1 << 20   # explicit wins
+    monkeypatch.setenv(HOST_POOL_ENV, "512K")
+    assert host_pool_from_env() == 512 << 10
+    assert host_pool_from_env(0) == 0         # explicit 0 beats env
+    monkeypatch.setenv(HOST_POOL_ENV, "lots")
+    with pytest.raises(ValueError, match=HOST_POOL_ENV):
+        host_pool_from_env()
+    monkeypatch.setenv(HOST_POOL_ENV, "-4K")
+    with pytest.raises(ValueError, match=">= 0"):
+        host_pool_from_env()
+
+
 def test_budget_shrink_without_restore_still_raises(model):
     """No scheduled recovery -> permanent infeasibility keeps the
     original MemoryError contract instead of stalling forever."""
@@ -412,3 +505,19 @@ def test_chaos_cancel_mid_megastep_identity(chaos_report):
     across N in {1, 8}; the victim keeps a nonempty strict prefix."""
     assert chaos_report["cancel_survivors_identical"]
     assert chaos_report["cancel_victim_mid_stream"]
+
+
+def test_chaos_spill_zero_reprefill(chaos_report):
+    """Satellite: every budget-bearing chaos schedule replayed with a
+    host tier yields bit-identical streams with ZERO re-prefilled
+    tokens — preempted work is restored, never recomputed — and the
+    deterministic shrink/restore anchor spills, restores, and saves
+    prefill tokens at both N in {1, 8}."""
+    assert chaos_report["spill_supported"]
+    assert chaos_report["spill_schedules"] > 0
+    assert chaos_report["spill_runs"] == 2 * chaos_report["spill_schedules"]
+    assert chaos_report["spill_ok"], chaos_report["spill_violations"][:5]
+    assert chaos_report["spill_total_restores"] > 0
+    assert chaos_report["spill_total_spills"] \
+        == chaos_report["spill_total_restores"]
+    assert chaos_report["spill_anchor_ok"]

@@ -85,3 +85,215 @@ def test_ring_cache_decode_any_length(total_len, window):
         np.testing.assert_allclose(np.asarray(of), np.asarray(orr),
                                    rtol=2e-4, atol=2e-4,
                                    err_msg=f"t={t} window={window}")
+
+
+# -- host KV tier (spill / restore) properties -------------------------------
+
+def _tier_cache(budget_blocks=16, host_blocks=8, block_size=4):
+    """BlockKVCache on a tiny attention-only config (state_bytes == 0,
+    so the host tier is sound) with budgets in whole blocks."""
+    from repro.configs.base import ModelConfig
+    from repro.runtime.kv_cache import BlockKVCache
+    cfg = ModelConfig(name="t", arch_type="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=32,
+                      vocab_size=7, dtype="float32")
+    probe = BlockKVCache(cfg, 0, block_size=block_size)
+    bb = probe.block_bytes
+    return BlockKVCache(cfg, budget_blocks * bb, block_size=block_size,
+                        host_budget_bytes=host_blocks * bb), bb
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_spill_restore_trace_budgets_and_exactness(data):
+    """Random admit/grow/spill/restore/drop/free traces: the device
+    pool's high-water never exceeds its budget, the host tier's bytes
+    never exceed ITS budget (spill_plan refuses instead), restore hands
+    back exactly the spilled token watermark with payloads intact, and
+    a full drain leaves both tiers quiescent."""
+    kv, bb = _tier_cache(budget_blocks=10, host_blocks=6)
+    live: dict = {}                     # slot -> n_tokens written
+    spilled: dict = {}                  # request id -> n_tokens
+    payload: dict = {}                  # request id -> scatter payloads
+    next_rid = [100]
+
+    def check():
+        assert kv.in_use <= kv.budget
+        assert kv.peak_bytes <= kv.budget
+        assert kv.host_in_use <= kv.host_budget
+        assert kv.host_in_use == kv.host_blocks_live * bb
+
+    for _ in range(data.draw(st.integers(5, 40), label="n_ops")):
+        ops = ["admit"]
+        if live:
+            ops += ["grow", "spill", "free"]
+        if spilled:
+            ops += ["restore", "drop"]
+        op = data.draw(st.sampled_from(ops), label="op")
+        if op == "admit":
+            slot = next(s for s in range(32) if s not in live)
+            n = data.draw(st.integers(1, 12), label="admit_tokens")
+            if kv.bytes_for(n) > kv.headroom:
+                continue
+            kv.admit(slot, n)
+            live[slot] = n
+        elif op == "grow":
+            slot = data.draw(st.sampled_from(sorted(live)), label="slot")
+            n = live[slot] + data.draw(st.integers(1, 8), label="extra")
+            if kv.grow(slot, n):
+                live[slot] = n
+        elif op == "spill":
+            slot = data.draw(st.sampled_from(sorted(live)), label="slot")
+            rid = next_rid[0]
+            next_rid[0] += 1
+            plan = kv.spill_plan(slot, rid, live[slot])
+            if plan is None:            # host tier full: refused, not over
+                check()
+                continue
+            data_map = {sid: ("payload", rid, sid)
+                        for sid in plan.capture_ids}
+            kv.commit_spill(plan, data_map)
+            kv.free(slot)
+            spilled[rid] = live.pop(slot)
+            payload[rid] = data_map
+        elif op == "restore":
+            rid = data.draw(st.sampled_from(sorted(spilled)), label="rid")
+            if kv.restore_bytes(rid) > kv.headroom:
+                continue
+            slot = next(s for s in range(32) if s not in live)
+            n_tokens, scatter = kv.restore(slot, rid)
+            assert n_tokens == spilled.pop(rid)
+            live[slot] = n_tokens
+            # payloads come back exactly as captured (no sharing in
+            # this trace: every block key is request-private)
+            assert {p for _, p in scatter} \
+                == set(payload.pop(rid).values())
+            assert len(kv.block_tables[slot]) == kv.blocks_for(n_tokens)
+        elif op == "drop":
+            rid = data.draw(st.sampled_from(sorted(spilled)), label="rid")
+            kv.drop_spill(rid)
+            spilled.pop(rid)
+            payload.pop(rid)
+        elif op == "free":
+            slot = data.draw(st.sampled_from(sorted(live)), label="slot")
+            kv.free(slot)
+            live.pop(slot)
+        check()
+
+    for slot in list(live):
+        kv.free(slot)
+    for rid in list(spilled):
+        kv.drop_spill(rid)
+    kv.assert_quiescent()
+
+
+@given(st.integers(min_value=2, max_value=6),
+       st.integers(min_value=0, max_value=7))
+@settings(max_examples=25, deadline=None)
+def test_shared_prefix_spills_once_restores_once(n_shared_blocks, extra):
+    """Siblings sharing a prompt prefix spill the shared blocks ONCE
+    (refcounted host entries, charged once) and restore them ONCE (the
+    first restore re-registers the chain hash; the second maps to the
+    restored physical block with zero transfer)."""
+    kv, bb = _tier_cache(budget_blocks=64, host_blocks=64)
+    B = kv.block_size
+    prompt_len = n_shared_blocks * B + 1 + extra
+    tokens = np.arange(prompt_len, dtype=np.int32)
+    shared_limit = (prompt_len - 1) // B     # admit's sharing cap
+
+    assert kv.admit(0, prompt_len, tokens=tokens) == 0
+    kv.publish(0, tokens, prompt_len)
+    m = kv.admit(1, prompt_len, tokens=tokens)
+    assert m == shared_limit * B             # sibling shares the prefix
+
+    spills = []
+    for slot, rid in ((0, 0), (1, 1)):
+        plan = kv.spill_plan(slot, rid, prompt_len)
+        assert plan is not None
+        kv.commit_spill(plan, {sid: ("pay", rid, sid)
+                               for sid in plan.capture_ids})
+        kv.free(slot)
+        spills.append(plan)
+    # the sibling's shared blocks were already resident: captured by
+    # the FIRST spill only, so the host holds each DISTINCT block once
+    assert len(spills[1].capture_ids) \
+        == kv.blocks_for(prompt_len) - shared_limit
+    distinct_blocks = 2 * kv.blocks_for(prompt_len) - shared_limit
+    assert kv.host_blocks_live == distinct_blocks
+    assert kv.metrics.counter("kv.spill_shared_hits").value \
+        == shared_limit
+
+    n0, scatter0 = kv.restore(2, 0)
+    assert n0 == prompt_len
+    assert len(scatter0) == kv.blocks_for(prompt_len)   # all transferred
+    n1, scatter1 = kv.restore(3, 1)
+    assert n1 == prompt_len
+    # the shared prefix came back with slot 2's restore and was
+    # re-registered: the sibling shares it again, zero extra transfer
+    assert len(scatter1) == kv.blocks_for(prompt_len) - shared_limit
+    for i in range(shared_limit):
+        assert kv.block_tables[2][i] is kv.block_tables[3][i]
+        assert kv.refcount(kv.block_tables[2][i].id) == 2
+    assert kv.host_blocks_live == 0 and kv.host_in_use == 0
+
+    kv.free(2)
+    kv.free(3)
+    kv.assert_quiescent()
+
+
+@given(st.integers(min_value=1, max_value=5),
+       st.integers(min_value=1, max_value=9))
+@settings(max_examples=25, deadline=None)
+def test_check_write_cow_survives_spill_round_trip(blocks, gen):
+    """COW invariants across a spill round-trip: the restored slot's
+    publish watermark and chain hash resume exactly, so writes above
+    the shared prefix pass check_write and writes INTO it still raise —
+    and the restored blocks republish under the same hashes."""
+    kv, bb = _tier_cache(budget_blocks=64, host_blocks=64)
+    B = kv.block_size
+    prompt_len = blocks * B + 1
+    tokens = np.arange(prompt_len, dtype=np.int32)
+    kv.admit(0, prompt_len, tokens=tokens)
+    kv.publish(0, tokens, prompt_len)
+    written = prompt_len + gen
+    assert kv.grow(0, written)
+    kv.check_write(0, prompt_len, written)   # above the prefix: fine
+    with pytest.raises(RuntimeError, match="shared block"):
+        kv.check_write(0, 0, 1)              # into the published prefix
+
+    plan = kv.spill_plan(0, 7, written)
+    assert plan is not None
+    # the plan covers exactly the written watermark, never trailing
+    # reserved blocks (grow past ``written`` then spilling would
+    # otherwise capture unwritten rows)
+    assert len(plan.entries) == kv.blocks_for(written)
+    kv.commit_spill(plan, {sid: ("pay", sid)
+                           for sid in plan.capture_ids})
+    kv.free(0)
+
+    n_tokens, _ = kv.restore(1, 7)
+    assert n_tokens == written
+    # the engine grows the table for the next token before dispatching
+    assert kv.grow(1, written + 1)
+    kv.check_write(1, written, written + 1)  # growth point: writable
+    with pytest.raises(RuntimeError, match="shared block"):
+        kv.check_write(1, 0, 1)              # prefix still protected
+    # a sibling admitted NOW shares the restored (re-registered) prefix
+    m = kv.admit(2, prompt_len, tokens=tokens)
+    assert m == ((prompt_len - 1) // B) * B
+    kv.free(1)
+    kv.free(2)
+    kv.assert_quiescent()
+
+
+def test_spill_plan_refuses_mid_write_overreach():
+    """spill_plan takes the WRITTEN watermark: asking it to cover more
+    tokens than the table holds trips its consistency assert — the
+    engine can never spill blocks a dispatch is still writing, because
+    it only spills between dispatches at slot_len."""
+    kv, _ = _tier_cache()
+    kv.admit(0, 5)
+    with pytest.raises(AssertionError):
+        kv.spill_plan(0, 1, 5 + 8 * kv.block_size)
+    kv.free(0)
+    kv.assert_quiescent()

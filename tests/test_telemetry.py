@@ -136,9 +136,11 @@ def test_recorder_event_schema():
     assert span["args"] == {"rows": 4}
     assert "dur" not in sub and sub["request_id"] == 7
     assert adm["slot"] == 1
-    # taxonomy partitions cleanly
+    # taxonomy partitions cleanly; request-tagged kinds may live on
+    # either side (spill/restore are durations — the transfer is timed)
     assert set(SPAN_KINDS) == set(DURATION_KINDS) | set(POINT_KINDS)
-    assert REQUEST_KINDS <= set(POINT_KINDS)
+    assert REQUEST_KINDS <= set(SPAN_KINDS)
+    assert {"spill", "restore"} <= REQUEST_KINDS & set(DURATION_KINDS)
 
 
 def test_request_timelines_ordering():
@@ -306,19 +308,20 @@ def test_engine_span_taxonomy(model, shared_stepper):
         _run(eng, cfg)
         runs.append((m, tele))
         seen |= {e["kind"] for e in tele.events}
-    # preempt + fault: a mid-run budget shrink below the bytes in use
-    # forces a demotion; the scheduled restore lets the run finish
-    # (same shape as the chaos budget-shrink test)
+    # preempt + fault + host tier: a mid-run budget shrink below ONE
+    # block demotes every active row (spill spans — the host pool is
+    # armed), nothing readmits until the scheduled restore (stalled
+    # points with the restore's ETA), then restoration re-admits from
+    # the host tier (restore spans) and the run finishes
     probe = BlockKVCache(cfg, 0, block_size=4)
     tele = Telemetry(trace=True)
     eng = _engine(model, shared_stepper, megastep=1, telemetry=tele,
-                  hbm_budget_bytes=int(
-                      (12 * probe.block_bytes
-                       + 3 * probe.state_bytes) / 0.6) + 1)
+                  host_pool=64 * probe.block_bytes,
+                  hbm_budget_bytes=int(12 * probe.block_bytes / 0.6) + 1)
+    assert eng.spill_enabled
     full = eng.kv.budget
     eng.faults = FaultPlane([
-        FaultEvent(3, "budget", budget_bytes=2 * probe.block_bytes
-                   + 3 * probe.state_bytes),
+        FaultEvent(3, "budget", budget_bytes=probe.block_bytes),
         FaultEvent(9, "budget", budget_bytes=full),
     ])
     for i, p in enumerate(_prompts(cfg, 3, plen=6)):
@@ -328,11 +331,19 @@ def test_engine_span_taxonomy(model, shared_stepper):
     kinds_with_faults = {e["kind"] for e in tele.events}
     assert "fault" in kinds_with_faults
     assert "preempt" in kinds_with_faults
+    assert "spill" in kinds_with_faults
+    assert "restore" in kinds_with_faults
+    assert "stalled" in kinds_with_faults
+    stalled = [e for e in tele.events if e["kind"] == "stalled"]
+    assert all(e["args"]["cause"] == "budget_shrunk" for e in stalled)
+    assert all(e["args"]["restore_eta_iteration"] == 9 for e in stalled)
+    assert eng.stalls == len(stalled)
 
     expected = set(SPAN_KINDS) - {"segment"}   # segment is hetero-only
     assert seen == expected
-    # schema: every event stamped and shaped per its kind
-    for _, t in runs:
+    # schema: every event stamped and shaped per its kind (the fault
+    # run rides along so spill/restore/stalled are schema-checked too)
+    for _, t in runs + [(1, tele)]:
         for e in t.events:
             assert e["kind"] in SPAN_KINDS
             assert e["ts"] > 0.0
