@@ -39,6 +39,18 @@ Metrics and how they are compared:
   traced re-run reproduced the untraced run bit-identically) and the
   disabled-recorder overhead (``telemetry.overhead.
   frac_of_token_wall``) must stay under 2 % of the per-token wall.
+* open-loop serving (``openloop``, from benchmarks/openloop.py): only
+  armed once the committed baseline carries the section, but then the
+  fresh report must keep the measurement meaningful — >= 3 rate legs
+  under async dispatch ON, exact per-leg status accounting (offered ==
+  completed + cancelled + failed + rejected), goodput present on every
+  leg and attainment >= 0.5 at the lowest offered rate, a saturation
+  knee, and ``peak_goodput_frac_of_capacity`` (peak open-loop goodput
+  over closed-loop capacity, both measured in-process on the same
+  machine so hardware cancels out) may not fall below half the
+  baseline's — a deliberately wide bound: the ratio carries scheduler
+  noise, and the failure mode it guards is the step/drain loop losing
+  the engine's throughput wholesale, not a few percent of jitter.
 * host KV tier: the spill-tier workload must keep the tier effective —
   ``spill_tier.spill.prefill_tokens_saved`` > 0 with zero
   ``reprefill_tokens`` (a preemption that recomputes despite host
@@ -203,6 +215,50 @@ def gate(baseline: dict, fresh: dict, threshold: float,
                            "different streams")
             worse_if_lower("spill_tier.spill.prefill_tokens_saved",
                            "host-tier prefill tokens saved")
+    # open-loop gates: armed once the baseline carries the section
+    # (same forward-compatibility contract as spill_tier above)
+    if _get(baseline, "openloop") is not None:
+        legs = _get(fresh, "openloop.legs")
+        if not isinstance(legs, list) or not legs:
+            bad.append("openloop section missing from fresh report — "
+                       "goodput under load not measured")
+        else:
+            if len(legs) < 3:
+                bad.append(f"openloop sweep has {len(legs)} rate "
+                           f"leg(s), need >= 3 for a knee")
+            if _get(fresh, "openloop.async_dispatch") is not True:
+                bad.append("openloop legs did not run under async "
+                           "dispatch (the measured configuration)")
+            for leg in legs:
+                rate = leg.get("rate_rps")
+                resolved = (leg.get("completed", 0)
+                            + leg.get("cancelled", 0)
+                            + leg.get("failed", 0)
+                            + leg.get("rejected", 0))
+                if resolved != leg.get("offered"):
+                    bad.append(
+                        f"openloop leg {rate} req/s lost requests: "
+                        f"offered {leg.get('offered')} but resolved "
+                        f"{resolved}")
+                if not isinstance(
+                        leg.get("goodput_tok_per_s"), (int, float)):
+                    bad.append(f"openloop leg {rate} req/s is missing "
+                               f"goodput_tok_per_s")
+            low = min(legs, key=lambda l: l.get("rate_rps", 0))
+            if low.get("slo_attainment", 0) < 0.5:
+                bad.append(
+                    f"openloop attainment {low.get('slo_attainment')} "
+                    f"at the lowest offered rate "
+                    f"({low.get('rate_rps')} req/s) — the engine "
+                    f"misses deadlines even unloaded")
+            knee = _get(fresh, "openloop.knee")
+            if not knee or not knee.get("rate_rps", 0) > 0:
+                bad.append("openloop sweep found no saturation knee: "
+                           "SLO attainment below threshold at every "
+                           "measured rate")
+            worse_if_lower("openloop.peak_goodput_frac_of_capacity",
+                           "open-loop peak goodput / closed-loop "
+                           "capacity", thr=0.5)
     return bad
 
 

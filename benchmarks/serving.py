@@ -133,6 +133,7 @@ def run_shared_prefix(api, params, stepper, cfg, args, n_requests):
     dict incl. the no-sharing physical-block bound."""
     import numpy as np
 
+    from repro.runtime.config import EngineConfig
     from repro.runtime.engine import ContinuousEngine, Request
 
     rng = np.random.default_rng(args.seed + 1)
@@ -144,13 +145,11 @@ def run_shared_prefix(api, params, stepper, cfg, args, n_requests):
          .astype(np.int32)]),
         max_new_tokens=3 + (i * 5) % 9) for i in range(n)]
     def mk():
-        return ContinuousEngine(api, params, hbm_budget_bytes=1 << 30,
-                                max_batch=args.max_batch,
-                                prefill_chunk=16,
-                                block_size=args.block_size,
-                                max_context=args.max_context,
-                                stepper=stepper,
-                                megastep=args.megastep)
+        return ContinuousEngine(api, params, config=EngineConfig(
+            hbm_budget=1 << 30, max_batch=args.max_batch,
+            prefill_chunk=16, block_size=args.block_size,
+            max_context=args.max_context, megastep=args.megastep,
+            host_pool=0, fault_seed=None), stepper=stepper)
 
     # warm THIS workload's megastep scan lengths (its budgets/flush
     # clips differ from the mixed workload's, so the main warmup does
@@ -183,6 +182,7 @@ def run_spill_tier(api, params, stepper, cfg, args, n_requests):
     restore is exact and demote-replay is deterministic."""
     import numpy as np
 
+    from repro.runtime.config import EngineConfig
     from repro.runtime.engine import ContinuousEngine, Request
     from repro.runtime.kv_cache import BlockKVCache
 
@@ -201,14 +201,11 @@ def run_spill_tier(api, params, stepper, cfg, args, n_requests):
     budget = 12 * probe.block_bytes + 1
 
     def mk(host_pool):
-        return ContinuousEngine(api, params, hbm_budget_bytes=budget,
-                                max_batch=args.max_batch,
-                                prefill_chunk=16,
-                                block_size=args.block_size,
-                                max_context=args.max_context,
-                                stepper=stepper,
-                                megastep=args.megastep,
-                                host_pool=host_pool)
+        return ContinuousEngine(api, params, config=EngineConfig(
+            hbm_budget=budget, max_batch=args.max_batch,
+            prefill_chunk=16, block_size=args.block_size,
+            max_context=args.max_context, megastep=args.megastep,
+            host_pool=host_pool, fault_seed=None), stepper=stepper)
 
     out = {"requests": n, "budget_blocks": 12}
     streams = {}
@@ -270,8 +267,11 @@ def main():
     if not args.async_dispatch:
         jax.config.update("jax_cpu_enable_async_dispatch", False)
 
+    from dataclasses import replace
+
     from repro.configs import get_config
     from repro.models import build_model
+    from repro.runtime.config import EngineConfig
     from repro.runtime.engine import ContinuousEngine, ServingEngine
     from repro.runtime.stepper import Stepper
 
@@ -283,20 +283,25 @@ def main():
     reqs = build_workload(cfg, n_requests, args.seed)
 
     shared = Stepper(api)
-    common = dict(hbm_budget_bytes=1 << 30, max_batch=args.max_batch,
-                  prefill_chunk=16, max_context=args.max_context,
-                  stepper=shared)
+    # one resolved config is the single source of truth for every
+    # engine in the report; variants only swap the megastep field
+    base_conf = EngineConfig(
+        hbm_budget=1 << 30, max_batch=args.max_batch, prefill_chunk=16,
+        max_context=args.max_context, block_size=args.block_size,
+        megastep=args.megastep, host_pool=0, fault_seed=None)
 
     import numpy as np
     from repro.runtime.engine import Request
 
     def mk_round():
-        return ServingEngine(api, params, **common)
+        return ServingEngine(api, params, config=base_conf,
+                             stepper=shared)
 
     def mk_cont(megastep=args.megastep, telemetry=None):
-        return ContinuousEngine(api, params, block_size=args.block_size,
-                                megastep=megastep, telemetry=telemetry,
-                                **common)
+        return ContinuousEngine(api, params,
+                                config=replace(base_conf,
+                                               megastep=megastep),
+                                telemetry=telemetry, stepper=shared)
 
     # warm the shared stepper so neither measured engine (nor any
     # request's TTFT) pays compiles: run the REAL workload once through

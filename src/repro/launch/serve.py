@@ -1,54 +1,59 @@
 """Serving entry point: batched requests through the §3.3-admitting engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
-        --requests 8 --max-new 16 [--budget-mb 256] \
-        [--engine round|continuous] [--megastep N] \
-        [--fault-seed S] [--max-queue Q] [--deadline-s D]
+        --requests 8 --max-new 16 [--engine round|continuous] \
+        [--arrival-rate R | --trace-file PATH] [--deadline-s D] \
+        [--megastep N] [--host-pool 512M] [--fault-seed S] ...
+
+Every engine knob flag (``--hbm-budget``, ``--max-batch``,
+``--megastep``, ``--host-pool``, ``--fault-seed``, ``--max-queue``,
+``--paged/--no-paged``, ...) is **generated** from
+:class:`repro.runtime.config.EngineConfig` — run ``--help`` for the
+full table.  An omitted flag falls back to its ``PARALLAX_*`` env var,
+then the field default (explicit always wins, including falsy values
+like ``--host-pool 0``), so the CLI, the env knobs, and the
+constructor can never drift apart.
 
 ``--engine continuous`` serves through the iteration-level slot-table
 engine on the physically paged block KV cache with cross-request
-prefix sharing (decoder-only models); ``--dense-cache`` falls back to
-the dense per-slot cache baseline.
+prefix sharing (decoder-only models); ``--no-paged`` falls back to the
+dense per-slot cache baseline.
 
-``--megastep N`` (or env ``PARALLAX_MEGASTEP``; default 8) fuses up to
-N decode iterations into ONE dispatch — greedy sampling, EOS checks and
-per-row termination run on device inside a ``lax.scan``, and the engine
-reserves KV blocks for the whole scan up front, reconciling streams,
-admission and unused blocks afterwards.  ``--megastep 1`` restores the
-per-iteration dispatch path (bit-identical streams either way).
-
-``--host-pool BYTES`` (or env ``PARALLAX_HOST_POOL``; K/M/G suffixes,
-e.g. ``512M``) arms the host KV tier: preempted requests spill their
-written cache blocks to a host-memory pool instead of discarding them,
-and re-admission restores the blocks bit-identically — zero re-prefill
-under memory pressure while the tier has capacity.  ``0`` (the
-default) keeps demote-only preemption.
+**Closed loop** (the default): all requests are submitted up front and
+``run()`` drains them — a throughput measurement.  **Open loop**:
+``--arrival-rate R`` injects Poisson arrivals at R req/s through the
+``submit()``/``step()``/``drain_completions()`` surface on the wall
+clock, so queueing is visible; ``--trace-file PATH`` replays a JSONL
+arrival trace instead (the format ``runtime/workload.py`` round-trips
+via ``save_trace``/``from_trace``; ``benchmarks/openloop.py
+--trace-out`` saves one).  Combined with ``--deadline-s`` the run
+reports SLO attainment.  Continuous engine only.
 
 ``--fault-seed S`` (or env ``PARALLAX_FAULT_SEED``) arms the
 fault-injection plane (``runtime/faults.py``) with a deterministic
-random schedule — budget shrink/restore, poisoned dispatches, request
-cancellations — and prints the degraded-mode counters afterwards;
-``--max-queue`` bounds admission (rejects carry machine-readable
-reasons) and ``--deadline-s`` attaches a wall-clock deadline to every
-request.  The continuous engine only; the round engine stays the
-unhardened measured baseline.
+random schedule and prints the degraded-mode counters afterwards; the
+engine itself never consults the env — this entry point resolves the
+seed via EngineConfig and hands the engine a built ``FaultPlane``.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import replace
 
 import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.core.scheduler import _parse_bytes
 from repro.models import build_model
+from repro.runtime.config import EngineConfig
 from repro.runtime.engine import (ContinuousEngine, Request,
                                   ServingEngine)
-from repro.runtime.faults import FaultPlane, fault_seed_from_env
+from repro.runtime.faults import FaultPlane
 from repro.runtime.telemetry import Telemetry
+from repro.runtime.workload import OpenLoopWorkload, percentile, \
+    run_open_loop
 
 
 def serve(arch: str, n_requests: int = 8, max_new: int = 16,
@@ -59,53 +64,87 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
           max_queue: "int | None" = None,
           deadline_s: "float | None" = None,
           trace_path: "str | None" = None,
-          host_pool: "int | None" = None):
+          host_pool: "int | None" = None,
+          config: "EngineConfig | None" = None,
+          arrival_rate: "float | None" = None,
+          trace_file: "str | None" = None):
     cfg = get_config(arch).reduced()
     api = build_model(cfg)
     params = api.init(jax.random.key(seed))
     tele = Telemetry(trace=trace_path is not None)
-    if fault_seed is None:
-        fault_seed = fault_seed_from_env()
-    if engine_mode != "continuous" and (fault_seed is not None
-                                        or max_queue is not None
-                                        or deadline_s is not None
-                                        or host_pool is not None):
+    if config is None:
+        # legacy keyword surface: a kwarg left at None is unset and
+        # falls through EngineConfig's env-then-default resolution
+        config = EngineConfig(
+            hbm_budget=budget_mb << 20, max_batch=max_batch,
+            paged=paged,
+            max_context=(prompt_len + max_new
+                         if engine_mode == "continuous" else None),
+            **{k: v for k, v in dict(
+                megastep=megastep, fault_seed=fault_seed,
+                max_queue=max_queue, host_pool=host_pool).items()
+               if v is not None})
+    open_loop = arrival_rate is not None or trace_file is not None
+    if engine_mode != "continuous" and (
+            config.fault_seed is not None or max_queue is not None
+            or deadline_s is not None or host_pool is not None
+            or open_loop):
         raise ValueError("fault plane / backpressure / deadlines / host "
-                         "KV tier harden the continuous engine only "
-                         "(--engine continuous)")
+                         "KV tier / open-loop arrivals harden the "
+                         "continuous engine only (--engine continuous)")
+
+    workload = None
+    if open_loop:
+        if trace_file is not None:
+            workload = OpenLoopWorkload.from_trace(
+                trace_file, vocab_size=cfg.vocab_size, seed=seed,
+                deadline_s=deadline_s)
+        else:
+            workload = OpenLoopWorkload.poisson(
+                arrival_rate, n_requests, cfg.vocab_size, seed=seed,
+                deadline_s=deadline_s)
+        need = max(len(a.request.prompt) + a.request.max_new_tokens
+                   for a in workload)
+        if config.max_context is None or config.max_context < need:
+            print(f"max_context {config.max_context} -> {need} "
+                  f"(longest workload request)")
+            config = replace(config, max_context=need)
+        request_ids = [a.request.id for a in workload]
+    else:
+        request_ids = list(range(n_requests))
+
     faults = None
     if engine_mode == "continuous":
-        engine = ContinuousEngine(api, params,
-                                  hbm_budget_bytes=budget_mb << 20,
-                                  max_batch=max_batch,
-                                  max_context=prompt_len + max_new,
-                                  paged=paged, megastep=megastep,
-                                  max_queue=max_queue, telemetry=tele,
-                                  host_pool=host_pool)
-        if fault_seed is not None:
+        engine = ContinuousEngine(api, params, config=config,
+                                  telemetry=tele)
+        if config.fault_seed is not None:
             # the schedule's budget events are absolute post-margin
             # byte values, so derive them from the pool's real budget
             faults = FaultPlane.random(
-                fault_seed, budget_bytes=engine.kv.budget,
-                request_ids=list(range(n_requests)),
-                max_batch=max_batch)
+                config.fault_seed, budget_bytes=engine.kv.budget,
+                request_ids=request_ids, max_batch=config.max_batch)
             engine.faults = faults
-            print(f"fault plane armed: seed {fault_seed}, "
+            print(f"fault plane armed: seed {config.fault_seed}, "
                   f"{len(faults.events)} events")
     else:
-        engine = ServingEngine(api, params,
-                               hbm_budget_bytes=budget_mb << 20,
-                               max_batch=max_batch, telemetry=tele)
-    rng = np.random.default_rng(seed)
-    for i in range(n_requests):
-        plen = int(rng.integers(4, prompt_len + 1))
-        engine.submit(Request(
-            id=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(
-                np.int32),
-            max_new_tokens=max_new, deadline_s=deadline_s))
-    t0 = time.time()
-    done = engine.run()
-    wall = time.time() - t0
+        engine = ServingEngine(api, params, config=config,
+                               telemetry=tele)
+
+    if open_loop:
+        res = run_open_loop(engine, workload)
+        done, wall = res.completions, res.wall_s
+        n_requests = len(workload)
+    else:
+        rng = np.random.default_rng(seed)
+        for i in range(n_requests):
+            plen = int(rng.integers(4, prompt_len + 1))
+            engine.submit(Request(
+                id=i, prompt=rng.integers(
+                    0, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=max_new, deadline_s=deadline_s))
+        t0 = time.time()
+        done = engine.run()
+        wall = time.time() - t0
     for rid in sorted(done):
         c = done[rid]
         tag = "" if c.ok else f" [{c.status}: {c.reason}]"
@@ -117,6 +156,18 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
           f"peak cache {engine.kv.peak_bytes/2**20:.1f} MiB "
           f"(budget {engine.kv.budget/2**20:.1f} MiB), "
           f"slab reuse hits {engine.kv.reuse_count}")
+    if open_loop:
+        ok = [c for c in done.values() if c.ok]
+        good = sum(len(c.tokens) for c in ok)
+        ttfts = [c.ttft_submit_s for c in ok if c.ttft_submit_s > 0]
+        depth = max((q for _, q, _ in res.queue_samples), default=0)
+        print(f"open loop: offered {workload.offered_rate_rps:.2f} "
+              f"req/s over {workload.duration_s:.2f}s, attainment "
+              f"{len(ok)}/{n_requests}, goodput "
+              f"{good / max(wall, 1e-9):.1f} tok/s, ttft p50 "
+              f"{percentile(ttfts, 50)*1e3:.1f} ms / p95 "
+              f"{percentile(ttfts, 95)*1e3:.1f} ms, peak queue "
+              f"{depth}")
     if engine_mode == "continuous":
         total = sum(len(c.tokens) for c in done.values())
         print(f"iterations {engine.iterations}, dispatches "
@@ -133,7 +184,7 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
                   f"{engine.kv.host_peak_bytes/2**20:.2f} MiB "
                   f"(pool {engine.kv.host_budget/2**20:.2f} MiB), "
                   f"stalls {engine.stalls}")
-        if faults is not None or max_queue is not None \
+        if faults is not None or config.max_queue is not None \
                 or deadline_s is not None:
             by_status: "dict[str, int]" = {}
             for c in done.values():
@@ -155,31 +206,25 @@ def serve(arch: str, n_requests: int = 8, max_new: int = 16,
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", choices=sorted(ARCHS),
                     default="stablelm-3b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--budget-mb", type=int, default=256)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", choices=("round", "continuous"),
                     default="round")
-    ap.add_argument("--dense-cache", action="store_true",
-                    help="dense per-slot KV arrays instead of the "
-                         "physically paged block pool")
-    ap.add_argument("--megastep", type=int, default=None,
-                    help="decode iterations fused per dispatch "
-                         "(default: env PARALLAX_MEGASTEP, then 8; "
-                         "1 = per-iteration dispatch path)")
-    ap.add_argument("--host-pool", default=None, metavar="BYTES",
-                    help="host KV tier pool size (K/M/G suffixes; "
-                         "default: env PARALLAX_HOST_POOL, else 0 = "
-                         "demote-only preemption, no spill)")
-    ap.add_argument("--fault-seed", type=int, default=None,
-                    help="arm the fault-injection plane with this seed "
-                         "(default: env PARALLAX_FAULT_SEED, else off)")
-    ap.add_argument("--max-queue", type=int, default=None,
-                    help="admission queue depth cap (excess submissions "
-                         "are rejected with reason 'queue_full')")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    metavar="RPS",
+                    help="open loop: Poisson arrivals at this req/s "
+                         "through submit()/step()/drain_completions() "
+                         "on the wall clock (continuous engine)")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="open loop: replay a JSONL arrival trace "
+                         "(see runtime/workload.py)")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request wall-clock deadline in seconds")
     ap.add_argument("--trace", default=None, metavar="PATH",
@@ -187,15 +232,21 @@ def main():
                          "trace-event JSON here (open in Perfetto); "
                          "recording never alters scheduling — streams "
                          "and dispatch counts stay bit-identical")
+    EngineConfig.add_cli_args(ap)
     args = ap.parse_args()
-    host_pool = None
-    if args.host_pool is not None:
-        host_pool = _parse_bytes(args.host_pool)
-    serve(args.arch, args.requests, args.max_new, args.budget_mb,
-          engine_mode=args.engine, paged=not args.dense_cache,
-          megastep=args.megastep, fault_seed=args.fault_seed,
-          max_queue=args.max_queue, deadline_s=args.deadline_s,
-          trace_path=args.trace, host_pool=host_pool)
+    overrides = {}
+    if args.max_context is None:
+        # closed-loop default: prompt + generation exactly fit; the
+        # round engine keeps its dynamic per-round bucketing
+        overrides["max_context"] = (
+            args.prompt_len + args.max_new
+            if args.engine == "continuous" else None)
+    config = EngineConfig.from_cli_args(args, **overrides)
+    serve(args.arch, args.requests, args.max_new,
+          prompt_len=args.prompt_len, seed=args.seed,
+          engine_mode=args.engine, deadline_s=args.deadline_s,
+          trace_path=args.trace, config=config,
+          arrival_rate=args.arrival_rate, trace_file=args.trace_file)
 
 
 if __name__ == "__main__":

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import os
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -58,6 +59,7 @@ import numpy as np
 
 from repro.core.scheduler import (_parse_bytes, greedy_select,
                                   incremental_select)
+from .config import EngineConfig
 from .kv_cache import BlockKVCache, KVCacheManager, request_peak_bytes
 from .stepper import Stepper
 from .telemetry import Telemetry
@@ -111,6 +113,34 @@ def host_pool_from_env(explicit: "int | None" = None) -> int:
     return n
 
 
+def _shim_config(config: "EngineConfig | None", legacy: dict,
+                 engine: str, exact: "dict | None" = None) -> EngineConfig:
+    """One release of back-compat for the pre-:class:`EngineConfig`
+    constructor surface: bare knob kwargs (deprecated) build a config
+    through the very same precedence resolution, so identical settings
+    produce identical engines on either path.  A legacy kwarg left at
+    ``None`` counts as *unset* (its historical meaning for ``megastep``
+    / ``host_pool`` / ``max_queue``) and falls through to the env var,
+    then the field default; ``exact`` entries were explicitly given and
+    bypass the None filter (the round engine's ``max_context=None`` is
+    a real value — dynamic per-round bucketing).  ``config=`` plus any
+    bare knob is a conflict and raises."""
+    passed = {k: v for k, v in legacy.items() if v is not None}
+    passed.update(exact or {})
+    if config is not None:
+        if passed:
+            raise ValueError(
+                f"{engine}: pass knobs via config= OR bare kwargs, "
+                f"not both (got config= and {sorted(passed)})")
+        return config
+    if passed:
+        warnings.warn(
+            f"{engine}: bare engine kwargs are deprecated — pass "
+            f"EngineConfig via config= (runtime/config.py)",
+            DeprecationWarning, stacklevel=3)
+    return EngineConfig(**passed)
+
+
 @dataclass
 class Request:
     id: int
@@ -144,6 +174,8 @@ class Completion:
     decode_s: float = 0.0
     ttft_s: float = 0.0            # run-start -> first generated token
     ttft_admit_s: float = 0.0      # admission -> first generated token
+    ttft_submit_s: float = 0.0     # submit -> first generated token
+    # (queueing included — the open-loop harness's TTFT-under-load)
     status: str = "completed"      # one of COMPLETION_STATUSES
     reason: "str | None" = None    # machine-readable, non-completed only
 
@@ -196,23 +228,44 @@ class ServingEngine:
     regardless of prompt-length remainders.
     """
 
-    def __init__(self, api, params, hbm_budget_bytes: int,
-                 max_batch: int = 8, margin: float = 0.4,
-                 prefill_chunk: int = 16,
-                 max_context: "int | None" = None,
+    _DYNAMIC_CTX = object()     # "max_context not passed" marker: the
+    # round engine's legacy default is None = dynamic bucketing, which
+    # the shim must distinguish from an explicit None
+
+    def __init__(self, api, params, hbm_budget_bytes: "int | None" = None,
+                 max_batch: "int | None" = None,
+                 margin: "float | None" = None,
+                 prefill_chunk: "int | None" = None,
+                 max_context=_DYNAMIC_CTX,
                  stepper: "Stepper | None" = None,
-                 telemetry: "Telemetry | None" = None):
+                 telemetry: "Telemetry | None" = None,
+                 config: "EngineConfig | None" = None):
+        exact = {}
+        if max_context is ServingEngine._DYNAMIC_CTX:
+            if config is None:
+                exact["max_context"] = None     # legacy default: dynamic
+        else:
+            exact["max_context"] = max_context
+        config = _shim_config(
+            config,
+            dict(hbm_budget=hbm_budget_bytes, max_batch=max_batch,
+                 margin=margin, prefill_chunk=prefill_chunk),
+            "ServingEngine", exact=exact)
+        self.config = config
         self.api = api
         self.cfg = api.cfg
         self.params = params
         # the paper's working-memory budget: free capacity minus margin
-        self.kv = KVCacheManager(self.cfg,
-                                 int(hbm_budget_bytes * (1.0 - margin)))
-        self.max_batch = max_batch
-        self.prefill_chunk = max(1, prefill_chunk)
-        self.max_context = max_context
+        self.kv = KVCacheManager(
+            self.cfg, int(config.hbm_budget * (1.0 - config.margin)))
+        self.max_batch = config.max_batch
+        self.prefill_chunk = config.prefill_chunk
+        self.max_context = config.max_context
         self.queue: list[Request] = []
         self.completed: dict[int, Completion] = {}
+        self._drainable: "deque[Completion]" = deque()
+        self._submit_t: dict[int, float] = {}
+        self._t0: "float | None" = None
         # A caller comparing engines bit-for-bit passes one shared
         # Stepper so both run the very same compiled executables (XLA
         # CPU codegen of two separately-jitted twins need not be
@@ -232,6 +285,7 @@ class ServingEngine:
         self._m_submitted = m.counter("engine.requests_submitted")
         self._m_resolved = m.counter("engine.requests_resolved")
         self._h_prompt = m.histogram("engine.prompt_len")
+        self._g_queue = m.gauge("engine.queue_depth")
 
     def submit(self, req: Request) -> bool:
         _validate_request(req, self.max_context)
@@ -243,7 +297,9 @@ class ServingEngine:
         self._rec.point("submit", request_id=req.id,
                         prompt_len=len(req.prompt),
                         max_new=req.max_new_tokens)
+        self._submit_t[req.id] = time.perf_counter()
         self.queue.append(req)
+        self._g_queue.set(len(self.queue))
         return True
 
     @property
@@ -330,10 +386,14 @@ class ServingEngine:
         ttft_admit_s = t_first - (t_admit if t_admit is not None
                                   else t_run0)
 
-        comps = {r.id: Completion(r.id, prefill_s=prefill_s,
-                                  ttft_s=ttft_s,
-                                  ttft_admit_s=ttft_admit_s)
-                 for r in batch_reqs}
+        comps = {r.id: Completion(
+            r.id, prefill_s=prefill_s, ttft_s=ttft_s,
+            ttft_admit_s=ttft_admit_s,
+            ttft_submit_s=t_first - self._submit_t.get(r.id, t_run0))
+            for r in batch_reqs}
+        for r in batch_reqs:
+            rec.point("first_token", request_id=r.id,
+                      ttft_s=round(ttft_s, 6))
         eos = np.full(B, -1, np.int64)
         for i, r in enumerate(batch_reqs):
             if r.eos_id is not None:
@@ -375,38 +435,69 @@ class ServingEngine:
             rec.point("complete", request_id=r.id, status="completed",
                       tokens=len(comps[r.id].tokens))
             self.completed[r.id] = comps[r.id]
+            self._drainable.append(comps[r.id])
+
+    # -- step/drain surface -------------------------------------------------
+
+    def has_work(self) -> bool:
+        """True while any submitted request is still unresolved."""
+        return bool(self.queue)
+
+    def step(self) -> None:
+        """ONE scheduling round: admit the largest-fitting subset of the
+        queue, prefill it as a batch, decode it to completion.  A no-op
+        when the queue is empty — callers drive ``submit()`` / ``step()``
+        / :meth:`drain_completions` from their own loop (the open-loop
+        harness), and :meth:`run` is a thin wrapper doing exactly that."""
+        if not self.queue:
+            return
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        batch_reqs = self._admit()
+        if not batch_reqs:
+            # between rounds the pool is empty, so an empty round means
+            # no queued request can EVER fit — raise like the continuous
+            # engine instead of silently dropping them
+            smallest = min(
+                request_peak_bytes(self.cfg, r.context_len())
+                for r in self.queue)
+            raise MemoryError(
+                f"no queued request fits: smallest peak {smallest} "
+                f"bytes, headroom {self.kv.budget - self.kv.in_use}")
+        self._g_queue.set(len(self.queue))
+        t_admit = time.perf_counter()
+        for i, r in enumerate(batch_reqs):
+            self.kv.admit(r.id, r.context_len())
+            self._rec.point("admit", request_id=r.id, slot=i)
+        self._run_round(batch_reqs, self._t0, t_admit)
+
+    def drain_completions(self) -> "list[Completion]":
+        """Completions resolved since the last drain, in resolution
+        order — the incremental twin of :meth:`run`'s end-of-world
+        dict (which keeps accumulating regardless of draining)."""
+        out = list(self._drainable)
+        self._drainable.clear()
+        return out
 
     def run(self, max_rounds: int = 64) -> "dict[int, Completion]":
-        t_run0 = time.perf_counter()
+        """Drain the queue through the step surface: at most
+        ``max_rounds`` scheduling rounds, then every still-queued
+        request resolves as failed (the cap is a liveness backstop,
+        not a silent drop)."""
+        self._t0 = time.perf_counter()
         rounds = 0
         while self.queue and rounds < max_rounds:
             rounds += 1
-            batch_reqs = self._admit()
-            if not batch_reqs:
-                # between rounds the pool is empty, so an empty round
-                # means no queued request can EVER fit — raise like the
-                # continuous engine instead of silently dropping them
-                smallest = min(
-                    request_peak_bytes(self.cfg, r.context_len())
-                    for r in self.queue)
-                raise MemoryError(
-                    f"no queued request fits: smallest peak {smallest} "
-                    f"bytes, headroom {self.kv.budget - self.kv.in_use}")
-            t_admit = time.perf_counter()
-            for i, r in enumerate(batch_reqs):
-                self.kv.admit(r.id, r.context_len())
-                self._rec.point("admit", request_id=r.id, slot=i)
-            self._run_round(batch_reqs, t_run0, t_admit)
-        # the round cap is a liveness backstop, not a silent drop: every
-        # request still queued resolves as failed so callers can account
-        # for every submitted id
+            self.step()
         for r in self.queue:
             self._m_resolved.inc()
             self._rec.point("complete", request_id=r.id, status="failed",
                             reason="max_rounds")
-            self.completed[r.id] = Completion(r.id, status="failed",
-                                              reason="max_rounds")
+            comp = Completion(r.id, status="failed", reason="max_rounds")
+            self.completed[r.id] = comp
+            self._drainable.append(comp)
         self.queue.clear()
+        self._g_queue.set(0)
         return self.completed
 
 
@@ -422,6 +513,7 @@ class _Seq:
     gen: "list[int]" = field(default_factory=list)
     ttft_s: "float | None" = None
     ttft_admit_s: "float | None" = None
+    ttft_submit_s: "float | None" = None
     admit_t: "float | None" = None     # first admission (pre-preemption)
     preempted: bool = False
     submit_t: "float | None" = None    # deadline_s counts from here
@@ -511,19 +603,44 @@ class ContinuousEngine:
     deadline hooks are single attribute checks when disarmed.
     """
 
-    def __init__(self, api, params, hbm_budget_bytes: int,
-                 max_batch: int = 8, margin: float = 0.4,
-                 prefill_chunk: int = 16, block_size: int = 16,
-                 max_context: int = 64,
+    def __init__(self, api, params, hbm_budget_bytes: "int | None" = None,
+                 max_batch: "int | None" = None,
+                 margin: "float | None" = None,
+                 prefill_chunk: "int | None" = None,
+                 block_size: "int | None" = None,
+                 max_context: "int | None" = None,
                  stepper: "Stepper | None" = None,
-                 paged: bool = True, prefix_sharing: bool = True,
+                 paged: "bool | None" = None,
+                 prefix_sharing: "bool | None" = None,
                  megastep: "int | None" = None,
                  faults=None,
                  max_queue: "int | None" = None,
-                 dispatch_retries: int = 2,
-                 retry_backoff_s: float = 0.001,
+                 dispatch_retries: "int | None" = None,
+                 retry_backoff_s: "float | None" = None,
                  telemetry: "Telemetry | None" = None,
-                 host_pool: "int | None" = None):
+                 host_pool: "int | None" = None,
+                 config: "EngineConfig | None" = None):
+        config = _shim_config(
+            config,
+            dict(hbm_budget=hbm_budget_bytes, max_batch=max_batch,
+                 margin=margin, prefill_chunk=prefill_chunk,
+                 block_size=block_size, max_context=max_context,
+                 paged=paged, prefix_sharing=prefix_sharing,
+                 megastep=megastep, max_queue=max_queue,
+                 dispatch_retries=dispatch_retries,
+                 retry_backoff_s=retry_backoff_s, host_pool=host_pool),
+            "ContinuousEngine")
+        if config.max_context is None:
+            raise ValueError("ContinuousEngine needs an integer "
+                             "max_context (the paged pool shape depends "
+                             "on it); max_context=None is the round "
+                             "engine's dynamic bucketing")
+        self.config = config
+        paged = config.paged
+        prefix_sharing = config.prefix_sharing
+        max_batch = config.max_batch
+        max_context = config.max_context
+        block_size = config.block_size
         if api.cfg.is_encoder_decoder:
             raise ValueError("ContinuousEngine serves decoder-only "
                              "models (encoder-decoder needs an encoder "
@@ -546,14 +663,14 @@ class ContinuousEngine:
         # host KV tier: only the paged path can spill (the dense cache
         # has no physical block rows to capture), and BlockKVCache
         # additionally gates on pure-attention archs (host_enabled)
-        self.host_pool_bytes = host_pool_from_env(host_pool) \
-            if paged else 0
+        self.host_pool_bytes = config.host_pool if paged else 0
         self.kv = BlockKVCache(self.cfg,
-                               int(hbm_budget_bytes * (1.0 - margin)),
+                               int(config.hbm_budget
+                                   * (1.0 - config.margin)),
                                block_size, metrics=m,
                                host_budget_bytes=self.host_pool_bytes)
         self.max_batch = max_batch
-        self.prefill_chunk = max(1, prefill_chunk)
+        self.prefill_chunk = config.prefill_chunk
         self.max_context = max_context
         if stepper is not None and stepper.api is not api:
             raise ValueError("shared stepper built for a different model")
@@ -601,6 +718,7 @@ class ContinuousEngine:
 
         self.waiting: "deque[_Seq]" = deque()
         self.completed: dict[int, Completion] = {}
+        self._drainable: "deque[Completion]" = deque()
         # scheduling iterations = step() calls.  Under a megastep one
         # step() fuses up to N decode iterations into one dispatch, so
         # engine.iterations advances by 1 while engine.fused_iterations
@@ -617,9 +735,9 @@ class ContinuousEngine:
         # benchmark asserts it and gate.py regresses on it (the
         # watchdog and deadline hooks must cost nothing when healthy).
         self.faults = faults
-        self.max_queue = max_queue
-        self.dispatch_retries = dispatch_retries
-        self.retry_backoff_s = retry_backoff_s
+        self.max_queue = config.max_queue
+        self.dispatch_retries = config.dispatch_retries
+        self.retry_backoff_s = config.retry_backoff_s
         self._m_watchdog_trips = m.counter("engine.watchdog_trips")
         self._m_megastep_fallbacks = m.counter("engine.megastep_fallbacks")
         self._m_retry_dispatches = m.counter("engine.retry_dispatches")
@@ -644,10 +762,11 @@ class ContinuousEngine:
         self._h_prompt = m.histogram("engine.prompt_len")
         self._h_generated = m.histogram("engine.generated_tokens")
         self._h_megastep_len = m.histogram("engine.megastep_len")
+        self._g_queue = m.gauge("engine.queue_depth")
         self._deadlines_armed = False
         # decode megastep: N fused iterations per dispatch (1 = the
-        # per-iteration path; env PARALLAX_MEGASTEP overrides default)
-        self.megastep_n = megastep_from_env(megastep)
+        # per-iteration path; env PARALLAX_MEGASTEP via EngineConfig)
+        self.megastep_n = config.megastep
         self._m_megasteps = m.counter("engine.megasteps")
         self._m_megastep_steps = m.counter("engine.megastep_steps")
         # slot-reset dispatches only exist to clear per-row state that
@@ -681,12 +800,15 @@ class ContinuousEngine:
             self._m_resolved.inc()
             self._rec.point("complete", request_id=req.id,
                             status="rejected", reason="queue_full")
-            self.completed[req.id] = Completion(
-                req.id, status="rejected", reason="queue_full")
+            comp = Completion(req.id, status="rejected",
+                              reason="queue_full")
+            self.completed[req.id] = comp
+            self._drainable.append(comp)
             return False
         if req.deadline_s is not None:
             self._deadlines_armed = True
         self.waiting.append(_Seq(req, submit_t=time.perf_counter()))
+        self._g_queue.set(len(self.waiting))
         return True
 
     def cancel(self, req_id: int, reason: str = "cancelled") -> bool:
@@ -699,6 +821,7 @@ class ContinuousEngine:
         for seq in self.waiting:
             if seq.req.id == req_id:
                 self.waiting.remove(seq)
+                self._g_queue.set(len(self.waiting))
                 self._m_cancellations.inc()
                 if self.spill_enabled:       # reclaim host-tier bytes
                     self.kv.drop_spill(req_id)
@@ -919,6 +1042,7 @@ class ContinuousEngine:
                                  if s.req.id not in placed)
         if not fresh.any():
             return 0
+        self._g_queue.set(len(self.waiting))
         if self._needs_reset:
             self._m_dispatches.inc()
             self.caches = self.stepper.reset_rows(self.caches, fresh)
@@ -1065,6 +1189,10 @@ class ContinuousEngine:
         now = time.perf_counter()
         seq.ttft_s = now - self._t0
         seq.ttft_admit_s = now - seq.admit_t
+        seq.ttft_submit_s = now - seq.submit_t
+        self._rec.point("first_token", request_id=seq.req.id,
+                        iteration=self.iterations,
+                        ttft_submit_s=round(seq.ttft_submit_s, 6))
         if len(seq.gen) >= seq.req.max_new_tokens \
                 or tok == seq.req.eos_id:
             self._finish(slot)
@@ -1114,6 +1242,7 @@ class ContinuousEngine:
             self._release_slot(slot)
         seq.preempted = True                  # priority re-admission
         self.waiting.appendleft(seq)
+        self._g_queue.set(len(self.waiting))
         self._m_preemptions.inc()
 
     # -- host KV tier: spill / restore --------------------------------------
@@ -1536,6 +1665,11 @@ class ContinuousEngine:
             if fresh_first:
                 seq.ttft_s = now - self._t0
                 seq.ttft_admit_s = now - seq.admit_t
+                seq.ttft_submit_s = now - seq.submit_t
+                self._rec.point("first_token", request_id=seq.req.id,
+                                iteration=self.iterations,
+                                ttft_submit_s=round(seq.ttft_submit_s,
+                                                    6))
             if seq.gen:
                 self.slot_last[s] = seq.gen[-1]
             # termination applies only once the prompt is consumed — a
@@ -1580,12 +1714,16 @@ class ContinuousEngine:
 
     def _resolve(self, seq: "_Seq", status: str,
                  reason: "str | None" = None) -> None:
-        self.completed[seq.req.id] = Completion(
+        comp = Completion(
             seq.req.id, tokens=list(seq.gen),
             ttft_s=seq.ttft_s if seq.ttft_s is not None else 0.0,
             ttft_admit_s=seq.ttft_admit_s
             if seq.ttft_admit_s is not None else 0.0,
+            ttft_submit_s=seq.ttft_submit_s
+            if seq.ttft_submit_s is not None else 0.0,
             status=status, reason=reason)
+        self.completed[seq.req.id] = comp
+        self._drainable.append(comp)
         self._m_resolved.inc()
         self._h_generated.observe(len(seq.gen))
         self._rec.point("complete", request_id=seq.req.id,
@@ -1711,7 +1849,24 @@ class ContinuousEngine:
         fut = self.faults.max_future_budget(self.iterations)
         return fut is not None and fut >= need
 
+    def has_work(self) -> bool:
+        """True while any submitted request is still unresolved —
+        waiting in the queue (including demoted/spilled) or live in a
+        slot.  The open-loop driver's loop condition."""
+        return bool(self.waiting) or self.num_active > 0
+
+    def drain_completions(self) -> "list[Completion]":
+        """Completions resolved since the last drain, in resolution
+        order — the incremental twin of :meth:`run`'s end-of-world
+        dict (which keeps accumulating regardless of draining).  Covers
+        every terminal status, including submit-time rejections."""
+        out = list(self._drainable)
+        self._drainable.clear()
+        return out
+
     def run(self, max_iters: int = 100_000) -> "dict[int, Completion]":
+        """Thin wrapper over the step surface: step until quiescent or
+        the iteration cap, then fail whatever is still live."""
         self._t0 = time.perf_counter()
         it = 0
         while (self.waiting or self.num_active) and it < max_iters:
@@ -1731,6 +1886,7 @@ class ContinuousEngine:
                 if self.spill_enabled:
                     self.kv.drop_spill(seq.req.id)
                 self._resolve(seq, "failed", "max_iters")
+            self._g_queue.set(0)
         return self.completed
 
     def assert_quiescent(self) -> None:

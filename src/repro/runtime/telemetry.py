@@ -17,10 +17,11 @@ that make a serving run diagnosable:
 
 * **Span recorder** (:class:`SpanRecorder`) — structured events with
   monotonic timestamps, per-request and per-iteration.  The taxonomy is
-  fixed (:data:`SPAN_KINDS`): ``submit`` / ``admit`` / ``prefill_chunk``
-  / ``decode`` / ``megastep`` / ``reconcile`` / ``preempt`` / ``spill``
-  / ``restore`` / ``stalled`` / ``fault`` / ``complete`` / ``iteration``
-  (engine) and ``segment`` (hetero executor).  Recording is **disabled by default**: every hook site is
+  fixed (:data:`SPAN_KINDS`): ``submit`` / ``admit`` / ``first_token``
+  / ``prefill_chunk`` / ``decode`` / ``megastep`` / ``reconcile`` /
+  ``preempt`` / ``spill`` / ``restore`` / ``stalled`` / ``fault`` /
+  ``complete`` / ``iteration`` (engine) and ``segment`` (hetero
+  executor).  Recording is **disabled by default**: every hook site is
   a single ``enabled`` check, ``now()`` returns ``0.0`` without touching
   the clock, and nothing allocates — the disabled hot path is
   micro-benchmarked by ``benchmarks/serving.py`` and gated under 2 % of
@@ -56,10 +57,14 @@ from bisect import bisect_left
 #: event against this taxonomy.  ``spill`` / ``restore`` time the host-
 #: tier block transfers (with block/byte args); ``stalled`` marks an
 #: iteration the engine deliberately idled through a shrunk budget
-#: waiting on a scheduled restore (cause + pending-restore ETA args).
-SPAN_KINDS = ("submit", "admit", "prefill_chunk", "decode", "megastep",
-              "reconcile", "preempt", "spill", "restore", "stalled",
-              "fault", "complete", "iteration", "segment")
+#: waiting on a scheduled restore (cause + pending-restore ETA args);
+#: ``first_token`` marks the instant a request's first generated token
+#: reached the host (submit -> first_token is the open-loop harness's
+#: TTFT-under-load signal).
+SPAN_KINDS = ("submit", "admit", "first_token", "prefill_chunk",
+              "decode", "megastep", "reconcile", "preempt", "spill",
+              "restore", "stalled", "fault", "complete", "iteration",
+              "segment")
 
 #: Kinds recorded with a duration (``ts`` + ``dur``); the rest are
 #: instantaneous points (``ts`` only).
@@ -69,8 +74,8 @@ DURATION_KINDS = frozenset({"iteration", "prefill_chunk", "decode",
 POINT_KINDS = frozenset(k for k in SPAN_KINDS if k not in DURATION_KINDS)
 
 #: Kinds that always carry a ``request_id``.
-REQUEST_KINDS = frozenset({"submit", "admit", "preempt", "spill",
-                           "restore", "complete"})
+REQUEST_KINDS = frozenset({"submit", "admit", "first_token", "preempt",
+                           "spill", "restore", "complete"})
 
 
 def log_buckets(lo: int = 1, hi: int = 1 << 16,
@@ -399,6 +404,11 @@ def chrome_trace(events: "list[dict]") -> dict:
                        "tid": 0, "ts": us(e["ts"]),
                        "args": dict(args, phase="admit",
                                     slot=slot)})
+        elif kind == "first_token":
+            te.append({"ph": "n", "cat": "request", "id": str(rid),
+                       "name": f"req {rid}", "pid": PID_REQUESTS,
+                       "tid": 0, "ts": us(e["ts"]),
+                       "args": dict(args, phase="first_token")})
         elif kind == "preempt":
             close_residency(rid, e["ts"])
             te.append({"ph": "n", "cat": "request", "id": str(rid),

@@ -1,0 +1,174 @@
+"""Child process for open-loop / step-drain stream checks (NOT pytest).
+
+Bitwise stream comparisons require synchronous XLA CPU dispatch (see
+tests/serving_identity_child.py for the full story); the flag is
+backend-init-time, so this runs as a dedicated child driven by
+tests/test_openloop.py.
+
+Usage: python openloop_child.py <arch>
+Prints one JSON object {arch: {...checks...}} on the last stdout line.
+
+Checks, per arch:
+
+* **drain equivalence** — the incremental ``submit()`` / ``step()`` /
+  ``drain_completions()`` surface must resolve the same requests to
+  bit-identical streams as one blocking ``run()``, at megastep N in
+  {1, 8} on the continuous engine and on the round engine, with the
+  engine quiescent after the drain.
+* **config == legacy** — ``ContinuousEngine(config=EngineConfig(...))``
+  and the deprecated bare-kwarg constructor resolve to identical knobs
+  and decode bit-identical streams (the api_redesign contract).
+* **open-loop determinism** — the same workload seed produces the same
+  arrival sequence, and two wall-clock open-loop drives (whose step
+  timing inevitably differs) decode bit-identical per-request streams,
+  both equal to the closed-loop reference: greedy decoding is
+  schedule-invariant, so arrival timing may change batching but never
+  tokens.
+"""
+
+import json
+import os
+import sys
+import warnings
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["PARALLAX_MEGASTEP"] = "8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_cpu_enable_async_dispatch", False)
+
+from repro.configs import get_config                      # noqa: E402
+from repro.models import build_model                      # noqa: E402
+from repro.runtime.config import EngineConfig             # noqa: E402
+from repro.runtime.engine import (ContinuousEngine,       # noqa: E402
+                                  ServingEngine)
+from repro.runtime.workload import (OpenLoopWorkload,     # noqa: E402
+                                    run_open_loop)
+
+N_REQUESTS = 8
+RATE_RPS = 120.0
+
+
+def _conf(**kw):
+    base = dict(hbm_budget=1 << 30, max_batch=3, block_size=4,
+                max_context=32, megastep=8, host_pool=0,
+                fault_seed=None)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _mk(api, params, **kw):
+    return ContinuousEngine(api, params, config=_conf(**kw))
+
+
+def _requests(cfg, seed=0):
+    wl = OpenLoopWorkload.poisson(RATE_RPS, N_REQUESTS, cfg.vocab_size,
+                                  seed=seed)
+    return [a.request for a in wl]
+
+
+def _streams(done):
+    return {rid: list(map(int, c.tokens)) for rid, c in done.items()}
+
+
+def _run_closed(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    return _streams(engine.run())
+
+
+def _run_step_drain(engine, reqs):
+    """The incremental surface: submit everything, then step until
+    quiet, draining after every step."""
+    for r in reqs:
+        engine.submit(r)
+    done = {}
+    for c in engine.drain_completions():      # max_queue rejects, etc.
+        done[c.request_id] = c
+    while engine.has_work():
+        engine.step()
+        for c in engine.drain_completions():
+            assert c.request_id not in done, "completion drained twice"
+            done[c.request_id] = c
+    assert engine.drain_completions() == []
+    if hasattr(engine, "assert_quiescent"):   # round engine has none
+        engine.assert_quiescent()
+    return _streams(done)
+
+
+def check(arch: str) -> dict:
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    out = {}
+
+    # fresh Request objects per engine: engines mutate nothing on the
+    # request, but ids must be unique per engine lifetime
+    mk_reqs = lambda seed=0: _requests(cfg, seed)  # noqa: E731
+
+    # -- drain equivalence, continuous, N in {1, 8} ---------------------
+    for n in (1, 8):
+        ref = _run_closed(_mk(api, params, megastep=n), mk_reqs())
+        inc = _run_step_drain(_mk(api, params, megastep=n), mk_reqs())
+        out[f"drain_equiv_n{n}"] = ref == inc
+        out[f"n{n}_tokens"] = sum(len(t) for t in ref.values())
+
+    # -- drain equivalence, round engine --------------------------------
+    rconf = EngineConfig(hbm_budget=1 << 30, max_batch=3,
+                         max_context=None)
+    r_ref = _run_closed(ServingEngine(api, params, config=rconf),
+                        mk_reqs())
+    r_inc = _run_step_drain(ServingEngine(api, params, config=rconf),
+                            mk_reqs())
+    out["round_drain_equiv"] = r_ref == r_inc
+
+    # -- config= vs deprecated bare kwargs ------------------------------
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = ContinuousEngine(
+            api, params, hbm_budget_bytes=1 << 30, max_batch=3,
+            block_size=4, max_context=32, megastep=8, host_pool=0)
+    modern = _mk(api, params)
+    out["config_equals_legacy_knobs"] = legacy.config == modern.config
+    out["config_equals_legacy_streams"] = (
+        _run_closed(legacy, mk_reqs()) == _run_closed(modern, mk_reqs()))
+
+    # -- open-loop determinism ------------------------------------------
+    wl_a = OpenLoopWorkload.poisson(RATE_RPS, N_REQUESTS,
+                                    cfg.vocab_size, seed=7)
+    wl_b = OpenLoopWorkload.poisson(RATE_RPS, N_REQUESTS,
+                                    cfg.vocab_size, seed=7)
+    out["arrivals_deterministic"] = (
+        [(a.t_s, a.request.id, a.request.max_new_tokens,
+          a.request.prompt.tolist()) for a in wl_a]
+        == [(b.t_s, b.request.id, b.request.max_new_tokens,
+             b.request.prompt.tolist()) for b in wl_b])
+    res_a = run_open_loop(_mk(api, params), wl_a)
+    res_b = run_open_loop(_mk(api, params), wl_b)
+    open_a = _streams(res_a.completions)
+    open_b = _streams(res_b.completions)
+    closed = _run_closed(_mk(api, params),
+                         [a.request for a in OpenLoopWorkload.poisson(
+                             RATE_RPS, N_REQUESTS, cfg.vocab_size,
+                             seed=7)])
+    out["openloop_deterministic"] = open_a == open_b
+    out["openloop_matches_closed"] = open_a == closed
+    out["openloop_all_completed"] = all(
+        c.ok for c in res_a.completions.values()) and \
+        len(res_a.completions) == N_REQUESTS
+    out["openloop_ttft_positive"] = all(
+        c.ttft_submit_s > 0 for c in res_a.completions.values())
+    return out
+
+
+def main():
+    report = {}
+    for arch in sys.argv[1:]:
+        report[arch] = check(arch)
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

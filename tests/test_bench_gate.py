@@ -41,6 +41,25 @@ BASE = {
                    "tok_per_s_vs_demote": 0.94},
     "identical_streams": True,
     "speedup_tok_per_s": 1.7,
+    "openloop": {
+        "async_dispatch": True,
+        "capacity": {"tok_per_s": 900.0, "req_per_s": 160.0},
+        "legs": [
+            {"rate_rps": 40.0, "offered": 36, "completed": 36,
+             "cancelled": 0, "failed": 0, "rejected": 0,
+             "slo_attainment": 1.0, "goodput_tok_per_s": 210.0},
+            {"rate_rps": 160.0, "offered": 36, "completed": 36,
+             "cancelled": 0, "failed": 0, "rejected": 0,
+             "slo_attainment": 1.0, "goodput_tok_per_s": 660.0},
+            {"rate_rps": 640.0, "offered": 36, "completed": 29,
+             "cancelled": 7, "failed": 0, "rejected": 0,
+             "slo_attainment": 0.81, "goodput_tok_per_s": 880.0},
+        ],
+        "knee": {"rate_rps": 160.0, "rate_frac_of_capacity": 1.0,
+                 "slo_attainment": 1.0, "beyond_sweep": False},
+        "peak_goodput_tok_per_s": 880.0,
+        "peak_goodput_frac_of_capacity": 0.97,
+    },
 }
 
 
@@ -186,6 +205,49 @@ def test_gate_fails_spill_tier_regressions():
     del old_base["spill_tier"]
     regressed = copy.deepcopy(BASE)
     regressed["spill_tier"]["spill"]["prefill_tokens_saved"] = 0
+    assert gate(old_base, regressed, 0.15) == []
+
+
+def test_gate_fails_openloop_regressions():
+    """Open-loop gates (armed once the baseline carries the section):
+    a missing section, < 3 legs, sync dispatch, a request-accounting
+    hole, missing per-leg goodput, unloaded deadline misses, a
+    vanished knee, or peak goodput falling below half the baseline's
+    capacity fraction must each fail."""
+    for mutate, needle in (
+        (lambda r: r.pop("openloop"), "openloop section missing"),
+        (lambda r: r["openloop"].update(
+            legs=r["openloop"]["legs"][:2]), "need >= 3"),
+        (lambda r: r["openloop"].update(async_dispatch=False),
+         "async dispatch"),
+        (lambda r: r["openloop"]["legs"][2].update(cancelled=5),
+         "lost requests"),
+        (lambda r: r["openloop"]["legs"][1].pop("goodput_tok_per_s"),
+         "missing goodput"),
+        (lambda r: r["openloop"]["legs"][0].update(slo_attainment=0.4),
+         "even unloaded"),
+        (lambda r: r["openloop"].update(knee=None), "no saturation knee"),
+        (lambda r: r["openloop"].update(
+            peak_goodput_frac_of_capacity=0.4), "peak goodput"),
+    ):
+        bad = copy.deepcopy(BASE)
+        mutate(bad)
+        out = gate(BASE, bad, 0.15)
+        assert any(needle in v for v in out), (needle, out)
+
+
+def test_gate_openloop_tolerates_noise_and_old_baselines():
+    """The goodput/capacity ratio carries scheduler noise — a 30% dip
+    passes; and a baseline without the section gates nothing."""
+    noisy = copy.deepcopy(BASE)
+    noisy["openloop"]["peak_goodput_frac_of_capacity"] = 0.68  # -30%
+    noisy["openloop"]["legs"][2]["slo_attainment"] = 0.5   # overloaded
+    assert gate(BASE, noisy, 0.15) == []
+
+    old_base = copy.deepcopy(BASE)
+    del old_base["openloop"]
+    regressed = copy.deepcopy(BASE)
+    del regressed["openloop"]
     assert gate(old_base, regressed, 0.15) == []
 
 

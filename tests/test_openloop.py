@@ -1,0 +1,255 @@
+"""Tests: open-loop workload generation + the step/drain engine surface.
+
+Bitwise stream assertions (drain-equivalence vs ``run()``, config-vs-
+legacy constructor, open-loop determinism) run in a synchronous-
+dispatch child process — tests/openloop_child.py — per the async-CPU-
+dispatch variance documented in tests/serving_identity_child.py.
+In-process tests here cover the pure-python pieces: Poisson/trace
+workload determinism, the clock loop's accounting, and the harness
+metric helpers (no model, no JAX dispatch).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.runtime.engine import Completion, Request
+from repro.runtime.workload import (DEFAULT_LENGTH_MIX, Arrival,
+                                    OpenLoopWorkload, percentile,
+                                    run_open_loop)
+
+CHILD = os.path.join(os.path.dirname(__file__), "openloop_child.py")
+
+
+@pytest.fixture(scope="module")
+def child_report():
+    proc = subprocess.run(
+        [sys.executable, CHILD, "stablelm-3b"],
+        capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])["stablelm-3b"]
+
+
+# -- step/drain surface (sync child) -----------------------------------------
+
+def test_drain_equivalence_across_megastep(child_report):
+    """Incremental step()+drain_completions() must resolve bit-identical
+    streams to one blocking run(), at N in {1, 8}, engine quiescent
+    after the drain and no completion delivered twice."""
+    assert child_report["drain_equiv_n1"], "N=1 drain diverged from run()"
+    assert child_report["drain_equiv_n8"], "N=8 drain diverged from run()"
+    assert child_report["n8_tokens"] > 0
+
+
+def test_round_engine_drain_equivalence(child_report):
+    """The round engine exposes the same surface with the same
+    semantics — one code path under run()."""
+    assert child_report["round_drain_equiv"]
+
+
+def test_config_constructor_matches_legacy_kwargs(child_report):
+    """api_redesign contract: EngineConfig and the deprecated bare
+    kwargs resolve identical knobs and decode identical bits."""
+    assert child_report["config_equals_legacy_knobs"]
+    assert child_report["config_equals_legacy_streams"]
+
+
+def test_open_loop_deterministic_and_schedule_invariant(child_report):
+    """Same seed => same arrival sequence; wall-clock jitter between
+    two drives changes batching but never tokens, and both equal the
+    closed-loop reference."""
+    assert child_report["arrivals_deterministic"]
+    assert child_report["openloop_deterministic"]
+    assert child_report["openloop_matches_closed"]
+    assert child_report["openloop_all_completed"]
+    assert child_report["openloop_ttft_positive"]
+
+
+# -- workload generation (pure python) ---------------------------------------
+
+def test_poisson_workload_deterministic_and_ordered():
+    a = OpenLoopWorkload.poisson(50.0, 40, vocab_size=512, seed=3)
+    b = OpenLoopWorkload.poisson(50.0, 40, vocab_size=512, seed=3)
+    assert len(a) == 40
+    times = [arr.t_s for arr in a]
+    assert times == sorted(times) and times[0] == 0.0
+    assert [arr.request.id for arr in a] == list(range(40))
+    assert all(np.array_equal(x.request.prompt, y.request.prompt)
+               and x.t_s == y.t_s
+               and x.request.max_new_tokens == y.request.max_new_tokens
+               for x, y in zip(a, b))
+    c = OpenLoopWorkload.poisson(50.0, 40, vocab_size=512, seed=4)
+    assert [arr.t_s for arr in c] != times
+
+
+def test_poisson_rate_and_length_mix():
+    wl = OpenLoopWorkload.poisson(80.0, 400, vocab_size=512, seed=0)
+    # mean inter-arrival gap within 30% of 1/rate at n=400
+    assert wl.offered_rate_rps == pytest.approx(80.0, rel=0.3)
+    bounds = [(p, n) for _, p, n in DEFAULT_LENGTH_MIX]
+    for a in wl:
+        plen, mnew = len(a.request.prompt), a.request.max_new_tokens
+        assert any(plo <= plen <= phi and nlo <= mnew <= nhi
+                   for (plo, phi), (nlo, nhi) in bounds), (plen, mnew)
+    # both mix classes actually drawn
+    short = sum(len(a.request.prompt) <= 7 for a in wl)
+    assert 0 < short < len(wl)
+
+
+def test_same_seed_different_rate_same_request_mix():
+    """Rate only scales the exponential gaps — the request mix (ids,
+    prompts, lengths) is identical across a sweep at one seed, so legs
+    differ in arrival pressure alone."""
+    a = OpenLoopWorkload.poisson(10.0, 30, vocab_size=512, seed=5)
+    b = OpenLoopWorkload.poisson(40.0, 30, vocab_size=512, seed=5)
+    for x, y in zip(a, b):
+        assert np.array_equal(x.request.prompt, y.request.prompt)
+        assert x.request.max_new_tokens == y.request.max_new_tokens
+    # gaps scale by exactly the rate ratio
+    ta = np.asarray([x.t_s for x in a])
+    tb = np.asarray([y.t_s for y in b])
+    assert np.allclose(ta, tb * 4.0)
+
+
+def test_trace_round_trip(tmp_path):
+    wl = OpenLoopWorkload.poisson(25.0, 12, vocab_size=128, seed=1,
+                                  deadline_s=0.5)
+    path = str(tmp_path / "trace.jsonl")
+    wl.save_trace(path)
+    back = OpenLoopWorkload.from_trace(path)
+    assert len(back) == len(wl)
+    for x, y in zip(wl, back):
+        assert x.t_s == pytest.approx(y.t_s, abs=1e-9)
+        assert np.array_equal(x.request.prompt, y.request.prompt)
+        assert x.request.max_new_tokens == y.request.max_new_tokens
+        assert x.request.deadline_s == y.request.deadline_s
+
+
+def test_trace_prompt_len_derivation_deterministic(tmp_path):
+    path = str(tmp_path / "lens.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"t_s": 0.0, "id": 0, "prompt_len": 6,
+                            "max_new": 4}) + "\n")
+        f.write(json.dumps({"t_s": 0.5, "id": 1, "prompt_len": 9,
+                            "max_new": 2}) + "\n")
+    a = OpenLoopWorkload.from_trace(path, vocab_size=64, seed=9)
+    b = OpenLoopWorkload.from_trace(path, vocab_size=64, seed=9)
+    for x, y in zip(a, b):
+        assert np.array_equal(x.request.prompt, y.request.prompt)
+    assert len(a.arrivals[0].request.prompt) == 6
+    with pytest.raises(ValueError, match="vocab_size"):
+        OpenLoopWorkload.from_trace(path)
+
+
+def test_trace_bad_line_reports_position(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"t_s": 0.0, "id": 0}\n')
+    with pytest.raises(ValueError, match="bad.jsonl:1"):
+        OpenLoopWorkload.from_trace(path)
+
+
+def test_workload_validation():
+    r = lambda i: Request(i, np.zeros(3, np.int32), max_new_tokens=2)  # noqa: E731
+    with pytest.raises(ValueError, match="time-ordered"):
+        OpenLoopWorkload([Arrival(1.0, r(0)), Arrival(0.5, r(1))])
+    with pytest.raises(ValueError, match="duplicate"):
+        OpenLoopWorkload([Arrival(0.0, r(0)), Arrival(0.5, r(0))])
+    with pytest.raises(ValueError, match="rate_rps"):
+        OpenLoopWorkload.poisson(0.0, 4, vocab_size=16)
+
+
+# -- clock loop accounting (stub engine, no JAX) -----------------------------
+
+class _StubEngine:
+    """Step-counted engine double: each request finishes after
+    ``steps_per_req`` step() calls; deadline_s is honored like the real
+    engine's cancellation path (resolved as status='cancelled')."""
+
+    def __init__(self, steps_per_req=2, max_active=2):
+        import time
+        self._clock = time.perf_counter
+        self.waiting = []
+        self.active = {}               # id -> [request, steps_left]
+        self.num_active = 0
+        self.max_active = max_active
+        self.steps_per_req = steps_per_req
+        self._done = []
+        self._submit_t = {}
+
+    def submit(self, req):
+        self.waiting.append(req)
+        self._submit_t[req.id] = self._clock()
+
+    def has_work(self):
+        return bool(self.waiting) or bool(self.active)
+
+    def step(self):
+        while self.waiting and len(self.active) < self.max_active:
+            r = self.waiting.pop(0)
+            self.active[r.id] = [r, self.steps_per_req]
+        for rid in list(self.active):
+            r, left = self.active[rid]
+            if r.deadline_s is not None and \
+                    self._clock() - self._submit_t[rid] > r.deadline_s:
+                del self.active[rid]
+                self._done.append(Completion(
+                    rid, tokens=[0], status="cancelled",
+                    reason="deadline"))
+                continue
+            left -= 1
+            self.active[rid][1] = left
+            if left <= 0:
+                del self.active[rid]
+                self._done.append(Completion(
+                    rid, tokens=[0] * r.max_new_tokens,
+                    ttft_submit_s=self._clock() - self._submit_t[rid]))
+        self.num_active = len(self.active)
+
+    def drain_completions(self):
+        out, self._done = self._done, []
+        return out
+
+
+def test_run_open_loop_accounting_and_order():
+    wl = OpenLoopWorkload.poisson(2000.0, 20, vocab_size=8, seed=0)
+    res = run_open_loop(_StubEngine(), wl)
+    assert sorted(res.completions) == [a.request.id for a in wl]
+    assert res.by_status() == {"completed": 20}
+    assert set(res.submit_t) == set(res.finish_t) == set(res.completions)
+    for rid in res.completions:
+        assert res.finish_t[rid] >= res.submit_t[rid]
+    assert res.wall_s > 0 and res.iterations > 0
+    assert res.queue_samples, "queue depth never sampled"
+
+
+def test_run_open_loop_respects_arrival_times():
+    """A request must never be submitted before its arrival time."""
+    wl = OpenLoopWorkload.poisson(50.0, 10, vocab_size=8, seed=2)
+    res = run_open_loop(_StubEngine(steps_per_req=1), wl)
+    for a in wl:
+        assert res.submit_t[a.request.id] >= a.t_s - 1e-9
+
+
+def test_run_open_loop_deadline_cancellations_accounted():
+    """Overload + tight deadlines: every offered id still resolves,
+    as completed or cancelled — no accounting holes."""
+    wl = OpenLoopWorkload.poisson(5000.0, 30, vocab_size=8, seed=1,
+                                  deadline_s=0.005)
+    # slow engine (tens of ms per request), 1 slot: the head request
+    # monopolizes it long enough that queued ones blow the 5ms deadline
+    res = run_open_loop(_StubEngine(steps_per_req=50_000, max_active=1),
+                        wl)
+    by = res.by_status()
+    assert sum(by.values()) == 30
+    assert by.get("cancelled", 0) > 0
+    assert len(res.completions) == 30
+
+
+def test_percentile_helper():
+    assert percentile([], 95) == 0.0
+    assert percentile([1.0, None, 3.0], 50) == 2.0
