@@ -51,6 +51,12 @@ Metrics and how they are compared:
   baseline's — a deliberately wide bound: the ratio carries scheduler
   noise, and the failure mode it guards is the step/drain loop losing
   the engine's throughput wholesale, not a few percent of jitter.
+* persistent prefix cache (``sequential_prefix``): armed once the
+  committed baseline carries the section, then the sequential-arrival
+  workload must keep ``prefill_tokens_saved_cache`` > 0 (live sharing
+  gets zero hits there, so the savings are the cache's alone), streams
+  must stay bit-identical cache-on vs cache-off, and the saved tokens
+  may not fall more than the threshold below baseline.
 * host KV tier: the spill-tier workload must keep the tier effective —
   ``spill_tier.spill.prefill_tokens_saved`` > 0 with zero
   ``reprefill_tokens`` (a preemption that recomputes despite host
@@ -215,6 +221,29 @@ def gate(baseline: dict, fresh: dict, threshold: float,
                            "different streams")
             worse_if_lower("spill_tier.spill.prefill_tokens_saved",
                            "host-tier prefill tokens saved")
+    # persistent prefix-cache gates: armed once the baseline carries
+    # the sequential_prefix section (same forward-compatibility
+    # contract as spill_tier above), then the cache must stay
+    # EFFECTIVE — the sequential-arrival workload gives live sharing
+    # zero hits, so every saved token below is the cache's alone
+    if _get(baseline, "sequential_prefix") is not None:
+        saved = _get(fresh,
+                     "sequential_prefix.prefill_tokens_saved_cache")
+        if saved is None:
+            bad.append("sequential_prefix section missing from fresh "
+                       "report — prefix-cache effectiveness not "
+                       "measured")
+        else:
+            if saved <= 0:
+                bad.append("persistent prefix cache saved zero prefill "
+                           "tokens on the sequential-arrival workload")
+            if _get(fresh, "sequential_prefix.identical_streams") \
+                    is not True:
+                bad.append("prefix cache changed decoded streams vs "
+                           "the cache-off run")
+            worse_if_lower(
+                "sequential_prefix.prefill_tokens_saved_cache",
+                "prefix-cache prefill tokens saved")
     # open-loop gates: armed once the baseline carries the section
     # (same forward-compatibility contract as spill_tier above)
     if _get(baseline, "openloop") is not None:

@@ -93,6 +93,7 @@ def leg_metrics(res, workload, rate_rps: float,
         "ttft_p95_ms": round(percentile(ttfts, 95) * 1e3, 2),
         "tbt_p50_ms": round(percentile(tbts, 50) * 1e3, 2),
         "tbt_p95_ms": round(percentile(tbts, 95) * 1e3, 2),
+        "tbt_p99_ms": round(percentile(tbts, 99) * 1e3, 2),
         "queue_depth_mean": round(
             sum(depths) / len(depths), 2) if depths else 0.0,
         "queue_depth_max": max(depths, default=0),

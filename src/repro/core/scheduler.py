@@ -131,10 +131,11 @@ def incremental_select(peak_mems: "dict[int, int]",
 
     ``reclaimable`` credits bytes the caller can free ON DEMAND before
     placement — the serving engine passes the cold KV blocks it could
-    spill to its host tier, so admission no longer defers everything
-    when the device pool is full but the host tier has room.  The
-    caller owns actually reclaiming (spilling) before it places what
-    was selected against the credit.
+    spill to its host tier plus the evictable blocks parked in the
+    persistent prefix cache, so admission no longer defers everything
+    when the device pool is full but those tiers have give.  The
+    caller owns actually reclaiming (spilling / evicting) before it
+    places what was selected against the credit.
     """
     if in_use < 0:
         raise ValueError(f"in_use must be >= 0, got {in_use}")

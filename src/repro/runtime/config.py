@@ -36,6 +36,7 @@ from .faults import FAULT_SEED_ENV
 MEGASTEP_ENV = "PARALLAX_MEGASTEP"
 MEGASTEP_DEFAULT = 8
 HOST_POOL_ENV = "PARALLAX_HOST_POOL"
+PREFIX_CACHE_ENV = "PARALLAX_PREFIX_CACHE"
 
 
 class _Unset:
@@ -63,6 +64,15 @@ def _parse_opt_int(text: str) -> "int | None":
     if text.lower() in ("none", ""):
         return None
     return int(text)
+
+
+def _parse_bool(text: str) -> bool:
+    t = text.strip().lower()
+    if t in ("1", "true", "yes", "on"):
+        return True
+    if t in ("0", "false", "no", "off"):
+        return False
+    raise ValueError(f"expected a boolean, got {text!r}")
 
 
 def _knob(default, *, env=None, parse=None, help="", unit=""):
@@ -122,6 +132,12 @@ class EngineConfig:
         True, parse=None,
         help="share identical prompt-prefix blocks across live requests "
              "(paged only)")
+    prefix_cache: bool = _knob(
+        False, env=PREFIX_CACHE_ENV, parse=_parse_bool,
+        help="retain finished requests' published prompt blocks in a "
+             "persistent radix cache (LRU-evicted under pressure) so "
+             "later identical prefixes skip prefill entirely "
+             "(paged attention-only archs; needs prefix_sharing)")
     max_queue: "int | None" = _knob(
         None, parse=_parse_opt_int,
         help="admission-queue bound: submits beyond it are rejected "
@@ -212,7 +228,7 @@ class EngineConfig:
             if meta["env"]:
                 help_text += f" [env {meta['env']}]"
             help_text += f" [default {meta['default']}]"
-            if meta["parse"] is None:  # boolean knob
+            if meta["parse"] in (None, _parse_bool):  # boolean knob
                 group.add_argument(
                     flag, action=argparse.BooleanOptionalAction,
                     default=None, help=help_text)

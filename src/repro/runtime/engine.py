@@ -668,7 +668,9 @@ class ContinuousEngine:
                                int(config.hbm_budget
                                    * (1.0 - config.margin)),
                                block_size, metrics=m,
-                               host_budget_bytes=self.host_pool_bytes)
+                               host_budget_bytes=self.host_pool_bytes,
+                               prefix_cache=(bool(config.prefix_cache)
+                                             and paged and prefix_sharing))
         self.max_batch = max_batch
         self.prefill_chunk = config.prefill_chunk
         self.max_context = max_context
@@ -684,6 +686,11 @@ class ContinuousEngine:
         self.prefix_sharing = (paged and prefix_sharing
                                and self.kv.block_bytes > 0
                                and self.kv.state_bytes == 0)
+        # the persistent prefix cache extends the same walk across
+        # request LIFETIMES (finished requests' published blocks are
+        # retained, LRU-evicted under pressure) and is gated on the
+        # exact same soundness conditions — the kv resolved them
+        self.prefix_cache = self.kv.prefix_cache
         # spill/restore moves whole written-token state through the
         # host tier, sound under the same conditions as sharing: the
         # entire per-token state must live in the KV blocks
@@ -703,6 +710,16 @@ class ContinuousEngine:
             self.caches = api.init_paged_caches(
                 max_batch, self.num_blocks, block_size,
                 jnp.dtype(self.cfg.dtype))
+            # cache-tier retention may exhaust the pool's free list; cap
+            # the slab ids the kv can mint so it recycles cached rows
+            # instead of indexing past the paged pools' physical rows
+            self.kv.row_cap = self.num_blocks
+            if self.prefix_cache:
+                self.kv.rec = self._rec
+                if self.kv.host_enabled:
+                    # evicted cached rows take a second chance host-side
+                    self.kv.capture_hook = self._capture_blocks
+                    self.kv.scatter_hook = self._scatter_blocks
         else:
             self.tables = None
             self.caches = api.init_caches(max_batch, max_context,
@@ -756,6 +773,8 @@ class ContinuousEngine:
         self._m_restores = m.counter("engine.restores")
         self._m_reprefill_tokens = m.counter("engine.reprefill_tokens")
         self._m_saved_tokens = m.counter("engine.prefill_tokens_saved")
+        self._m_saved_cache = m.counter(
+            "engine.prefill_tokens_saved_cache")
         self._m_stalls = m.counter("engine.stalls")
         self._m_submitted = m.counter("engine.requests_submitted")
         self._m_resolved = m.counter("engine.requests_resolved")
@@ -933,6 +952,14 @@ class ContinuousEngine:
         return self._m_saved_tokens.value
 
     @property
+    def prefill_tokens_saved_cache(self) -> int:
+        """Tokens whose prefill the persistent prefix cache skipped —
+        admissions that revived cached blocks with NO live holder (live
+        sharing saves tokens too, but never these: they'd have
+        re-prefilled under sharing alone)."""
+        return self._m_saved_cache.value
+
+    @property
     def stalls(self) -> int:
         """Iterations deliberately idled through an infeasible (shrunk)
         budget while a scheduled restore pends."""
@@ -970,6 +997,7 @@ class ContinuousEngine:
             "paged": self.paged,
             "spill_enabled": self.spill_enabled,
             "host_pool_bytes": self.kv.host_budget,
+            "prefix_cache": self.prefix_cache,
         }
         snap["stepper"] = self.stepper.trace_stats()
         return snap
@@ -1006,6 +1034,11 @@ class ContinuousEngine:
                     f"request {seq.req.id}: resumed cache needs {need} "
                     f"bytes, more than the whole block-pool budget "
                     f"{self.kv.budget}")
+            if need > self.kv.headroom:
+                # cold cache yields before a demoted request waits: the
+                # same evictions (and the same spill-key pins) restore
+                # itself would apply, so the re-check below is exact
+                self.kv.reclaim_cached(need, protect_spill=seq.req.id)
             if need > self.kv.headroom:
                 break
             self.waiting.remove(seq)
@@ -1063,9 +1096,16 @@ class ContinuousEngine:
                 grew = self.kv.grow(slot, len(prompt))
                 assert grew, "restore admission underestimated need"
         else:
+            cache_before = self.kv.prefix_cache_hit_blocks
             matched = self.kv.admit(
                 slot, len(prompt),
                 tokens=prompt if self.prefix_sharing else None)
+            if self.prefix_cache:
+                # revived blocks had NO live holder — without the
+                # cache every one of their tokens would re-prefill
+                self._m_saved_cache.inc(
+                    (self.kv.prefix_cache_hit_blocks - cache_before)
+                    * self.kv.block_size)
         if seq.preempted:
             # tokens REPLAYED through prefill: written before the
             # demotion but recomputed now (prompt tokens past the
@@ -1357,14 +1397,16 @@ class ContinuousEngine:
         self.caches = new
 
     def _reclaimable_bytes(self) -> int:
-        """Device bytes fresh admission could reclaim by spilling cold
-        decode slots (youngest-first victims, same order as preemption)
-        to the host tier — 0 unless spill is enabled and the host pool
-        can absorb the capture.  Conservative: shared blocks may free
-        less than counted, so placement re-verifies real headroom."""
+        """Device bytes fresh admission could reclaim on demand: the
+        prefix cache's evictable blocks (cheapest — nothing live
+        demotes) plus cold decode slots it could spill (youngest-first
+        victims, same order as preemption) while the host pool can
+        absorb the capture.  Conservative on the spill half: shared
+        blocks may free less than counted, so placement re-verifies
+        real headroom."""
         if not self.spill_enabled:
-            return 0
-        total = 0
+            return self.kv.evictable_bytes
+        total = self.kv.evictable_bytes
         host_room = self.kv.host_headroom
         for s in range(self.max_batch):
             if self.slot_phase[s] != DECODE:
@@ -1378,12 +1420,16 @@ class ContinuousEngine:
         return total
 
     def _spill_for(self, need: int) -> bool:
-        """Spill youngest decode slots to the host tier until ``need``
-        bytes of device headroom exist; False when reclamation falls
-        short (the admission that asked simply defers)."""
-        if not self.spill_enabled:
-            return False
+        """Reclaim device headroom for ``need`` bytes: prefix-cache
+        blocks are evicted first (cheapest — nothing live demotes),
+        then youngest decode slots spill to the host tier; False when
+        reclamation falls short (the admission that asked simply
+        defers)."""
         while need > self.kv.headroom:
+            if self.kv.evict_cached():
+                continue
+            if not self.spill_enabled:
+                return False
             victims = [s for s in range(self.max_batch)
                        if self.slot_phase[s] == DECODE]
             if not victims:
@@ -1552,7 +1598,10 @@ class ContinuousEngine:
 
             while n >= 2:
                 need = extra_bytes(n)
-                if need == 0 or need <= self.kv.headroom - reserve:
+                # evictable cached blocks count: grow() reclaims them
+                # internally, so the reservation below cannot fall short
+                if need == 0 or need <= self.kv.headroom \
+                        + self.kv.evictable_bytes - reserve:
                     break
                 n -= 1
             if n < 2:

@@ -210,10 +210,33 @@ class BlockKVCache:
     full and is never written again (``check_write`` enforces this, and
     the sharing cap in ``admit`` keeps every row's first written
     position past its shared prefix).
+
+    **Persistent prefix cache** (``prefix_cache=True``).  Chain-hash
+    registrations form a radix tree over physical rows: each registered
+    hash's parent is the hash one block shorter (root ``b"kv0"``), kept
+    in ``_parent``/``_children``.  When a finished slot's ``free`` drops
+    the LAST reference on a *registered* block, the block is not
+    released — it moves to the cache tier (``_cached``: hash -> LRU
+    tick, zero live holders, still registered, still charged against
+    the budget).  A later ``admit`` whose prompt walk reaches a cached
+    hash *revives* the block in place — the physical row is mapped into
+    the new table and those tokens skip prefill entirely, even though
+    no live request held them in between.  Eviction pops the
+    least-recently-cached **leaf** (a cached hash with no registered
+    children — interior nodes with live or cached descendants are
+    structurally never evictable first) whenever the pool needs bytes
+    (admission/growth/restore shortfall, a runtime budget shrink, or a
+    physical ``row_cap`` hit), so cold cache yields to live work,
+    deterministically: the tick order is completion order.  With the
+    host tier armed, an evicted block gets a second chance: its payload
+    is captured to the host pool (``_host_lru``, refcount 0) and an
+    admission walk that misses the device tree can still revive it
+    through one host->device scatter instead of re-prefilling.
     """
 
     def __init__(self, cfg, budget_bytes: int, block_size: int = 16,
-                 metrics=None, host_budget_bytes: int = 0):
+                 metrics=None, host_budget_bytes: int = 0,
+                 prefix_cache: bool = False):
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if host_budget_bytes < 0:
@@ -242,6 +265,29 @@ class BlockKVCache:
         self._slab_hash: "dict[int, bytes]" = {}    # slab id -> chain hash
         self._published: "dict[int, int]" = {}      # slot -> #blocks hashed
         self._chain: "dict[int, bytes]" = {}        # slot -> hash at mark
+        # persistent prefix cache: radix-tree links over registered
+        # hashes + the LRU tier of retained zero-holder blocks.  Sound
+        # only for block-granular KV with no per-row state (same gating
+        # as the host tier: SSM/conv state cannot outlive its slot).
+        self.prefix_cache = (bool(prefix_cache) and self.block_bytes > 0
+                             and self.state_bytes == 0)
+        self._parent: "dict[bytes, bytes]" = {}     # hash -> parent hash
+        self._children: "dict[bytes, set]" = {}     # hash -> child hashes
+        self._cached: "dict[bytes, int]" = {}       # hash -> LRU tick
+        self._lru_tick = 0
+        self._host_lru: "dict[object, int]" = {}    # host-cached -> tick
+        #: physical row cap of the paged pools (engine-injected); a
+        #: fresh acquisition that would mint a row past the cap evicts
+        #: a cached row instead of corrupting paged indexing.  None =
+        #: unbounded (direct cache use without paged pools).
+        self.row_cap: "int | None" = None
+        #: engine-injected transfer hooks for the host second-chance
+        #: tier: capture(ids) -> {id: payload}, scatter([(id, payload)])
+        self.capture_hook = None
+        self.scatter_hook = None
+        #: optional span recorder (engine-injected) for cache_evict
+        #: points; never consulted for decisions
+        self.rec = None
         # host block tier: spilled payloads keyed by chain hash (shared
         # prefix blocks) or a per-request private key — restoring costs
         # only the blocks no live slot still registers.  Spill/restore
@@ -274,6 +320,14 @@ class BlockKVCache:
         self._m_spill_shared = m.counter("kv.spill_shared_hits")
         self._g_host_blocks = m.gauge("kv.host_blocks_live")
         self._g_host_bytes = m.gauge("kv.host_bytes_in_use")
+        # persistent prefix cache flow: device revives, host-tier
+        # revives, and LRU evictions from each tier
+        self._m_cache_hits = m.counter("kv.prefix_cache_hits")
+        self._m_cache_host_hits = m.counter("kv.prefix_cache_host_hits")
+        self._m_cache_evictions = m.counter("kv.prefix_cache_evictions")
+        self._m_cache_host_evictions = \
+            m.counter("kv.prefix_cache_host_evictions")
+        self._g_cached = m.gauge("kv.prefix_cache_blocks")
 
     # -- metric façade (legacy attribute names) -----------------------------
 
@@ -295,16 +349,65 @@ class BlockKVCache:
 
     @property
     def live_blocks(self) -> int:
-        """Physical KV blocks currently held (shared blocks count
-        once) — the pool-occupancy gauge's instantaneous value."""
-        return len(self._ref)
+        """Physical KV blocks currently held (shared blocks count once,
+        cache-tier retained blocks included) — the pool-occupancy
+        gauge's instantaneous value."""
+        return len(self._ref) + len(self._cached)
+
+    @property
+    def prefix_cache_hits(self) -> int:
+        """Blocks revived from the persistent cache (device tier)."""
+        return self._m_cache_hits.value
+
+    @property
+    def prefix_cache_host_hits(self) -> int:
+        """Blocks revived from the host second-chance tier."""
+        return self._m_cache_host_hits.value
+
+    @property
+    def prefix_cache_hit_blocks(self) -> int:
+        """Total cache-attributable revivals (device + host tiers) —
+        blocks whose tokens skipped prefill with no live holder."""
+        return self._m_cache_hits.value + self._m_cache_host_hits.value
+
+    @property
+    def prefix_cache_evictions(self) -> int:
+        return self._m_cache_evictions.value
+
+    @property
+    def cached_blocks(self) -> int:
+        """Blocks currently retained by the cache tier (zero holders)."""
+        return len(self._cached)
+
+    @property
+    def evictable_bytes(self) -> int:
+        """Device bytes reclaimable RIGHT NOW by repeated leaf-first
+        eviction — reported to the scheduler as reclaimable headroom so
+        admission never stalls behind cold cache.  A cached block that
+        is an *ancestor* of a live registered block is excluded: it
+        stays pinned in the tree until its live descendants resolve
+        (possible only when a concurrent-prefill race published a child
+        under another request's registered parent), so counting it
+        would let admission overcommit and hit a surprise MemoryError."""
+        if not self._cached:
+            return 0
+        pinned: "set[bytes]" = set()
+        for sid, h in self._slab_hash.items():
+            if self._ref.get(sid, 0) > 0:
+                p = self._parent.get(h)
+                while p is not None and p not in pinned:
+                    pinned.add(p)
+                    p = self._parent.get(p)
+        n = sum(1 for h in self._cached if h not in pinned)
+        return n * self.block_bytes
 
     def _track(self) -> None:
         """Refresh the occupancy gauges after any allocation/release;
         gauges carry a high-water mark, so this is also where peak
         occupancy is captured."""
-        self._g_blocks.set(len(self._ref))
+        self._g_blocks.set(len(self._ref) + len(self._cached))
         self._g_bytes.set(self.in_use)
+        self._g_cached.set(len(self._cached))
 
     def _track_host(self) -> None:
         self._host_peak = max(self._host_peak, self._host_in_use)
@@ -361,12 +464,17 @@ class BlockKVCache:
     def set_budget(self, budget_bytes: int) -> None:
         """Adjust the pool budget at runtime (co-tenant memory pressure,
         driven by the fault plane).  The new budget may be BELOW the
-        bytes currently in use: nothing is evicted here — the engine
-        reacts by refusing admission/growth and demote-preempting until
-        ``in_use`` fits again."""
+        bytes currently in use: no *live* block is ever evicted here —
+        the engine reacts by refusing admission/growth and
+        demote-preempting until ``in_use`` fits again.  With the
+        persistent prefix cache enabled, cold cached blocks are LRU-
+        evicted FIRST (second-chanced to the host tier when armed), so
+        a shrink only ever demotes live requests once the cache tier is
+        empty."""
         if budget_bytes < 0:
             raise ValueError(f"budget must be >= 0, got {budget_bytes}")
         self.budget = budget_bytes
+        self._shrink_to_budget()
 
     @property
     def in_use(self) -> int:
@@ -399,10 +507,160 @@ class BlockKVCache:
         return hashlib.sha1(h + blk.tobytes()).digest()
 
     def _acquire_block(self):
+        if self._cached and self.row_cap is not None:
+            # no free slab and the pool is at its physical row cap: a
+            # fresh acquire would mint a slab id past the paged pools'
+            # rows — recycle cached rows instead of corrupting indexing
+            while (self.pool.total_allocated - self.pool.in_use
+                    < self.block_bytes
+                    and self.pool.total_allocated
+                    >= self.row_cap * self.block_bytes):
+                if not self._evict_one():
+                    break
         slab = self.pool.acquire(self.block_bytes)
         self._ref[slab.id] = 1
         self._m_acquired.inc()
         return slab
+
+    # -- persistent prefix cache (radix tree + LRU tier) --------------------
+
+    def _tick(self) -> int:
+        t = self._lru_tick
+        self._lru_tick += 1
+        return t
+
+    def _link(self, parent: bytes, child: bytes) -> None:
+        """Record a radix-tree edge at (re-)registration time."""
+        if not self.prefix_cache:
+            return
+        self._parent[child] = parent
+        self._children.setdefault(parent, set()).add(child)
+
+    def _unlink(self, h: bytes) -> None:
+        p = self._parent.pop(h, None)
+        if p is not None:
+            kids = self._children.get(p)
+            if kids is not None:
+                kids.discard(h)
+                if not kids:
+                    del self._children[p]
+
+    def _share(self, slab) -> None:
+        """Take a reference on a registered block: a live share, or a
+        revival of a cache-tier block (zero holders -> one)."""
+        h = self._slab_hash.get(slab.id)
+        if h is not None and h in self._cached:
+            del self._cached[h]
+            self._ref[slab.id] = 1
+            self._m_cache_hits.inc()
+        else:
+            self._ref[slab.id] += 1
+        self._m_shared_hits.inc()
+
+    def _evict_one(self, protect=frozenset()) -> bool:
+        """Drop the least-recently-cached LEAF from the device tier.
+
+        Only leaves are candidates: a cached hash with a registered
+        child is interior (and by table contiguity a cached hash never
+        has a *live* child — any live holder of the child also holds
+        the parent).  Ties cannot occur (ticks are unique), so eviction
+        order is a pure function of completion order: deterministic.
+        With the host tier armed and transfer hooks attached, the
+        payload is captured host-side (second chance) before the device
+        row is released.  Returns False when nothing is evictable."""
+        best = None
+        for h, tick in self._cached.items():
+            if h in protect or self._children.get(h):
+                continue
+            if best is None or tick < self._cached[best]:
+                best = h
+        if best is None:
+            return False
+        slab = self._registry.pop(best)
+        del self._slab_hash[slab.id]
+        del self._cached[best]
+        self._unlink(best)
+        to_host = False
+        if (self.host_enabled and self.capture_hook is not None
+                and best not in self._host):
+            while self.block_bytes > self.host_headroom \
+                    and self._host_lru:
+                self._evict_host_one()
+            if self.block_bytes <= self.host_headroom:
+                ent = _HostEntry(self.capture_hook([slab.id])[slab.id])
+                ent.refs = 0
+                self._host[best] = ent
+                self._host_in_use += self.block_bytes
+                self._host_lru[best] = self._tick()
+                self._track_host()
+                to_host = True
+        self.pool.release(slab)
+        self._m_released.inc()
+        self._m_cache_evictions.inc()
+        if self.rec is not None:
+            self.rec.point("cache_evict", block=slab.id,
+                           bytes=self.block_bytes, to_host=to_host)
+        self._track()
+        return True
+
+    def _evict_host_one(self) -> bool:
+        """Drop the LRU host-cached payload (refcount 0 — never a
+        spill-record pin).  Host entries carry no sharing semantics, so
+        no leaf discipline is needed; an orphaned child key simply ages
+        out unreachable."""
+        if not self._host_lru:
+            return False
+        h = min(self._host_lru, key=self._host_lru.get)
+        del self._host_lru[h]
+        del self._host[h]
+        self._host_in_use -= self.block_bytes
+        self._m_cache_host_evictions.inc()
+        self._track_host()
+        return True
+
+    def _reclaim(self, need: int, protect=frozenset()) -> None:
+        """Evict cached blocks until ``need`` bytes fit in headroom (or
+        the tier is dry).  ``protect`` pins hashes an in-flight
+        admission is about to revive."""
+        while need > self.headroom and self._cached:
+            if not self._evict_one(protect):
+                break
+
+    def _reclaim_host(self, need: int) -> None:
+        while need > self.host_headroom and self._host_lru:
+            self._evict_host_one()
+
+    def _shrink_to_budget(self) -> None:
+        while self.in_use > self.budget and self._cached:
+            if not self._evict_one():
+                break
+
+    def clear_cache(self) -> None:
+        """Evict every cache-tier block (drains the radix tree;
+        leaf-first order makes full drain always reachable)."""
+        while self._cached:
+            if not self._evict_one():
+                break
+
+    def evict_cached(self) -> bool:
+        """Public single-step eviction — the engine's cheapest
+        reclamation rung (nothing live demotes).  False when the tier
+        is empty or every cached block is pinned under a live child."""
+        return self._evict_one()
+
+    def reclaim_cached(self, need: int, protect_spill=None) -> None:
+        """Evict cache-tier blocks until ``need`` bytes fit in headroom
+        (or nothing more is evictable).  ``protect_spill`` names a
+        spilled request whose still-registered keys an imminent restore
+        will share — those are pinned, exactly as :meth:`restore`'s own
+        internal reclaim pins them, so a caller that checks headroom
+        after this can trust restore not to raise."""
+        protect = frozenset()
+        if protect_spill is not None and protect_spill in self._spilled:
+            protect = frozenset(
+                k for k in self._spilled[protect_spill].keys
+                if isinstance(k, bytes) and k in self._registry)
+        self._reclaim(need, protect)
 
     def admit(self, slot: int, n_tokens: int, tokens=None) -> int:
         """Allocate a fresh slot's prompt blocks + state slab.
@@ -417,42 +675,82 @@ class BlockKVCache:
         every write this slot will ever issue strictly above its shared
         prefix (copy-on-write never triggers; check_write enforces).
 
+        With the persistent prefix cache, the walk additionally revives
+        matching cache-tier blocks (zero live holders) in place, and —
+        when the host second-chance tier is armed — continues through
+        host-resident payloads, scattering them back onto fresh device
+        rows.  Cold cached blocks are LRU-evicted if the remainder does
+        not fit the raw headroom.
+
         Returns the number of prefix tokens already present in the
         cache (a multiple of ``block_size``; 0 without sharing) — the
         engine starts prefill *after* them.
         """
         assert slot not in self.block_tables, f"slot {slot} already live"
         shared, chain = [], b"kv0"
+        host_hits: "list[tuple]" = []       # (hash, parent hash)
         if tokens is not None and self.block_bytes and n_tokens > 1:
             assert len(tokens) == n_tokens, (len(tokens), n_tokens)
             limit = (n_tokens - 1) // self.block_size
             for i in range(limit):
                 h = self._chain_step(chain, tokens, i)
                 slab = self._registry.get(h)
-                if slab is None:
-                    break
-                shared.append(slab)
-                chain = h
-        fresh = self.blocks_for(n_tokens) - len(shared)
-        need = fresh * self.block_bytes + self.state_bytes
+                # the registered set is ancestor-closed (leaf-first
+                # eviction), so device hits always precede host hits;
+                # the guard keeps table order token order regardless
+                if slab is not None and not host_hits:
+                    shared.append(slab)
+                    chain = h
+                    continue
+                ent = self._host.get(h)
+                if (self.prefix_cache and self.scatter_hook is not None
+                        and ent is not None and ent.refs == 0):
+                    host_hits.append((h, chain))
+                    chain = h
+                    continue
+                break
+        fresh = self.blocks_for(n_tokens) - len(shared) - len(host_hits)
+        need = (fresh + len(host_hits)) * self.block_bytes \
+            + self.state_bytes
+        # pin the host hits against host-LRU eviction, and the matched
+        # device hashes against the reclaim below, while we make room
+        pinned = {h: self._host_lru.pop(h) for h, _ in host_hits}
+        self._reclaim(need, protect=frozenset(
+            self._slab_hash[s.id] for s in shared
+            if s.id in self._slab_hash))
         if need > self.headroom:
+            self._host_lru.update(pinned)   # un-pin: nothing admitted
             raise MemoryError(
                 f"slot {slot}: {need} bytes exceeds block-pool headroom "
                 f"({self.headroom})")
         for slab in shared:
-            self._ref[slab.id] += 1
-            self._m_shared_hits.inc()
-        self.block_tables[slot] = shared + [self._acquire_block()
-                                            for _ in range(fresh)]
-        self._m_prompt_acquired.inc(fresh)
+            self._share(slab)
+        table = list(shared)
+        scatter = []
+        for h, parent in host_hits:
+            slab = self._acquire_block()
+            ent = self._host.pop(h)
+            self._host_in_use -= self.block_bytes
+            scatter.append((slab.id, ent.data))
+            self._registry[h] = slab
+            self._slab_hash[slab.id] = h
+            self._link(parent, h)
+            self._m_cache_host_hits.inc()
+            table.append(slab)
+        if scatter:
+            self.scatter_hook(scatter)
+            self._track_host()
+        table.extend(self._acquire_block() for _ in range(fresh))
+        self.block_tables[slot] = table
+        self._m_prompt_acquired.inc(fresh + len(host_hits))
         if self.state_bytes:
             self.state_slabs[slot] = \
                 self.state_pool.acquire(self.state_bytes)
-        self._published[slot] = len(shared)
+        self._published[slot] = len(shared) + len(host_hits)
         self._chain[slot] = chain          # hash at the published mark
         self._peak = max(self._peak, self.in_use)
         self._track()
-        return len(shared) * self.block_size
+        return (len(shared) + len(host_hits)) * self.block_size
 
     def publish(self, slot: int, tokens, n_filled: int) -> None:
         """Register the slot's full prompt blocks entirely covered by
@@ -470,11 +768,13 @@ class BlockKVCache:
         table = self.block_tables[slot]
         chain = self._chain.get(slot, b"kv0")   # hash at ``start`` blocks
         for i in range(start, full):
+            parent = chain
             chain = self._chain_step(chain, tokens, i)
             if chain not in self._registry:
                 slab = table[i]
                 self._registry[chain] = slab
                 self._slab_hash[slab.id] = chain
+                self._link(parent, chain)
         self._published[slot] = full
         self._chain[slot] = chain
 
@@ -510,7 +810,11 @@ class BlockKVCache:
         if extra <= 0:
             return True
         if extra * self.block_bytes > self.headroom:
-            return False
+            # cold cache yields before growth is refused (and the
+            # caller demote-preempts a live request)
+            self._reclaim(extra * self.block_bytes)
+            if extra * self.block_bytes > self.headroom:
+                return False
         table.extend(self._acquire_block() for _ in range(extra))
         self._peak = max(self._peak, self.in_use)
         self._track()
@@ -549,14 +853,25 @@ class BlockKVCache:
         slab) the iteration a request finishes or is preempted.  A block
         returns to the pool — §3.2 cross-request reuse — only when its
         LAST holder leaves; its hash registration is dropped at the same
-        moment (sharing engages among concurrently live requests)."""
+        moment (sharing engages among concurrently live requests).
+
+        With ``prefix_cache`` enabled, a *registered* block whose last
+        holder leaves is retained by the cache tier instead (LRU-
+        stamped in table order, so deeper blocks — the tree's leaves —
+        carry later ticks): a later admission with the same prefix
+        revives it and skips prefill.  Unregistered blocks (partial
+        last prompt block, generated tokens) release as before."""
         freed = 0
         for slab in self.block_tables.pop(slot):
             self._ref[slab.id] -= 1
             if self._ref[slab.id] == 0:
                 del self._ref[slab.id]
-                h = self._slab_hash.pop(slab.id, None)
+                h = self._slab_hash.get(slab.id)
+                if h is not None and self.prefix_cache:
+                    self._cached[h] = self._tick()
+                    continue
                 if h is not None:
+                    del self._slab_hash[slab.id]
                     del self._registry[h]
                 self.pool.release(slab)
                 freed += 1
@@ -567,6 +882,10 @@ class BlockKVCache:
         self._chain.pop(slot, None)
         self._m_released.inc(freed)
         self._track()
+        if self.in_use > self.budget:
+            # a shrunk budget outlives the live blocks that pinned it:
+            # the moment they demote to cache they become evictable
+            self._shrink_to_budget()
 
     # -- host block tier (spill / restore) ----------------------------------
 
@@ -595,7 +914,12 @@ class BlockKVCache:
             entries.append((key, slab.id, need))
             fresh += need
         if fresh * self.block_bytes > self.host_headroom:
-            return None
+            # a live spill outranks cold host-cached payloads: drop the
+            # LRU ones to make room (the only impurity of this plan —
+            # it still allocates nothing device-side)
+            self._reclaim_host(fresh * self.block_bytes)
+            if fresh * self.block_bytes > self.host_headroom:
+                return None
         return SpillPlan(slot, request_id, n_tokens, entries)
 
     def commit_spill(self, plan: "SpillPlan", data: dict) -> int:
@@ -619,6 +943,10 @@ class BlockKVCache:
                 spilled += self.block_bytes
                 self._m_spilled_blocks.inc()
             else:
+                if ent.refs == 0:
+                    # host-cached (second-chance) payload: the spill
+                    # record pins it out of the host LRU ring
+                    self._host_lru.pop(key, None)
                 ent.refs += 1
                 self._m_spill_shared.inc()
         self._m_spill_bytes.inc(spilled)
@@ -656,22 +984,33 @@ class BlockKVCache:
         invariants survive the round trip.  Returns ``(n_tokens,
         scatter)`` with ``scatter = [(slab_id, payload), ...]``."""
         assert slot not in self.block_tables, f"slot {slot} already live"
+        protect = frozenset(
+            k for k in self._spilled[request_id].keys
+            if isinstance(k, bytes) and k in self._registry)
         need = self.restore_bytes(request_id)
+        self._reclaim(need, protect)
         if need > self.headroom:
             raise MemoryError(
                 f"request {request_id}: restore needs {need} bytes, "
                 f"headroom is {self.headroom}")
         rec = self._spilled.pop(request_id)
+        # revive/ref every still-registered key FIRST so the fresh-block
+        # acquisitions below (which may row-cap-evict cache-tier blocks)
+        # can never race the shares away
+        shares = {}
+        for key in rec.keys:
+            if isinstance(key, bytes):
+                slab = self._registry.get(key)
+                if slab is not None:
+                    self._share(slab)
+                    shares[key] = slab
         table, scatter = [], []
         restored = 0
+        prev = b"kv0"
         for key in rec.keys:
             ent = self._host[key]
-            slab = self._registry.get(key) \
-                if isinstance(key, bytes) else None
-            if slab is not None:
-                self._ref[slab.id] += 1
-                self._m_shared_hits.inc()
-            else:
+            slab = shares.get(key)
+            if slab is None:
                 slab = self._acquire_block()
                 scatter.append((slab.id, ent.data))
                 restored += 1
@@ -680,7 +1019,10 @@ class BlockKVCache:
                     # siblings and later admissions share them again
                     self._registry[key] = slab
                     self._slab_hash[slab.id] = key
+                    self._link(prev, key)
             table.append(slab)
+            if isinstance(key, bytes):
+                prev = key
             ent.refs -= 1
             if ent.refs == 0:
                 del self._host[key]
@@ -710,32 +1052,60 @@ class BlockKVCache:
         self._track_host()
 
     def assert_quiescent(self) -> None:
-        """Assert the pool is fully drained: no live block tables or
-        state slabs, zero bytes in use, no refcounts, and an empty
-        prefix-sharing registry.  This is the zero-leak invariant every
-        engine run must restore once all requests resolve (completed,
-        cancelled, rejected or failed) — the chaos suite calls it after
-        every fault schedule, and the engine tests after every run, so a
-        single leaked block anywhere in the admit/grow/release_to/free
-        lifecycle fails loudly instead of silently shrinking the pool."""
+        """Assert the pool is drained of LIVE state: no block tables or
+        state slabs, no refcounts, no publish watermarks, no spill
+        records.  This is the zero-leak invariant every engine run must
+        restore once all requests resolve (completed, cancelled,
+        rejected or failed) — the chaos suite calls it after every fault
+        schedule, and the engine tests after every run, so a single
+        leaked block anywhere in the admit/grow/release_to/free
+        lifecycle fails loudly instead of silently shrinking the pool.
+
+        The persistent prefix cache may legitimately be NON-empty at
+        drain — that is its whole point — so the audit instead proves
+        it consistent: every retained byte belongs to a cached
+        registered block, the radix links are closed over the registry,
+        bytes stay within both budgets, and every host payload is
+        either cache-tier (refcount 0, LRU-tracked) or a leak."""
         assert not self.block_tables, \
             f"leaked block tables for slots {sorted(self.block_tables)}"
         assert not self.state_slabs, \
             f"leaked state slabs for slots {sorted(self.state_slabs)}"
-        assert self.pool.in_use == 0, \
-            f"block pool still holds {self.pool.in_use} bytes"
+        assert not self._ref, f"dangling block refcounts: {self._ref}"
+        assert self.pool.in_use == len(self._cached) * self.block_bytes, \
+            f"block pool holds {self.pool.in_use} bytes but the cache " \
+            f"tier accounts {len(self._cached) * self.block_bytes}"
         assert self.state_pool.in_use == 0, \
             f"state pool still holds {self.state_pool.in_use} bytes"
-        assert not self._ref, f"dangling block refcounts: {self._ref}"
-        assert not self._registry and not self._slab_hash, \
-            "prefix-sharing registry not empty after drain"
+        assert set(self._registry) == set(self._cached), \
+            "prefix registry and cache tier diverged after drain"
+        assert sorted(self._slab_hash.values()) == \
+            sorted(self._registry), "slab-hash map diverged from registry"
+        assert self.in_use <= self.budget, \
+            f"cache tier exceeds budget: {self.in_use} > {self.budget}"
+        if self.prefix_cache:
+            for h in self._registry:
+                p = self._parent.get(h)
+                assert p == b"kv0" or p in self._registry, \
+                    "cached block's parent missing from registry"
+            kids = set()
+            for s in self._children.values():
+                kids |= s
+            assert kids == set(self._parent) <= set(self._registry), \
+                "radix links not closed over the registry"
         assert not self._published and not self._chain, \
             "publish watermarks outlive their slots"
         assert not self._spilled, \
             f"spilled requests never resolved: {sorted(self._spilled)}"
-        assert not self._host and self._host_in_use == 0, \
-            f"host tier still holds {len(self._host)} blocks " \
-            f"({self._host_in_use} bytes)"
+        pinned = [k for k, e in self._host.items() if e.refs > 0]
+        assert not pinned, \
+            f"host tier leaks {len(pinned)} pinned blocks"
+        assert set(self._host) == set(self._host_lru), \
+            "host cache tier and its LRU ring diverged"
+        assert self._host_in_use == len(self._host) * self.block_bytes \
+            and self._host_in_use <= self.host_budget, \
+            f"host tier holds {self._host_in_use} bytes for " \
+            f"{len(self._host)} blocks (budget {self.host_budget})"
 
     def table_ids(self, slot: int) -> "list[int]":
         """The slot's physical block table (slab ids double as pool row

@@ -60,11 +60,13 @@ from bisect import bisect_left
 #: waiting on a scheduled restore (cause + pending-restore ETA args);
 #: ``first_token`` marks the instant a request's first generated token
 #: reached the host (submit -> first_token is the open-loop harness's
-#: TTFT-under-load signal).
+#: TTFT-under-load signal); ``cache_evict`` marks a prefix-cache block
+#: leaving the device pool (block/byte args, ``to_host`` when the host
+#: tier gave it a second chance).
 SPAN_KINDS = ("submit", "admit", "first_token", "prefill_chunk",
               "decode", "megastep", "reconcile", "preempt", "spill",
               "restore", "stalled", "fault", "complete", "iteration",
-              "segment")
+              "segment", "cache_evict")
 
 #: Kinds recorded with a duration (``ts`` + ``dur``); the rest are
 #: instantaneous points (``ts`` only).

@@ -160,6 +160,23 @@ def check(arch: str) -> dict:
         len(res_a.completions) == N_REQUESTS
     out["openloop_ttft_positive"] = all(
         c.ttft_submit_s > 0 for c in res_a.completions.values())
+
+    # -- trace round trip through a REAL engine -------------------------
+    # save_trace -> from_trace must preserve everything the engine can
+    # observe: replaying the recorded workload resolves the same ids to
+    # bit-identical streams and identical status accounting as the
+    # Poisson leg it was recorded from (the workload-only half of the
+    # round trip lives in test_openloop.py::test_trace_round_trip)
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "wl.jsonl")
+        wl_a.save_trace(path)
+        wl_r = OpenLoopWorkload.from_trace(path)
+    res_r = run_open_loop(_mk(api, params), wl_r)
+    out["trace_replay_streams"] = _streams(res_r.completions) == open_a
+    out["trace_replay_status"] = res_r.by_status() == res_a.by_status()
+    out["trace_replay_accounted"] = (
+        len(res_r.completions) == len(wl_r) == N_REQUESTS)
     return out
 
 

@@ -13,6 +13,7 @@ Usage: python serving_identity_child.py <arch> [<arch> ...]
        python serving_identity_child.py --fuzz <arch> [<arch> ...]
        python serving_identity_child.py --chaos <arch> [<seed> ...]
        python serving_identity_child.py --tele <arch> [<arch> ...]
+       python serving_identity_child.py --cache <arch> [<arch> ...]
 Prints one JSON object {arch: {...checks...}} on the last stdout line.
 
 ``--fuzz`` runs the megastep termination fuzz instead of the identity
@@ -31,6 +32,14 @@ Budget-bearing schedules additionally replay with the host KV tier
 armed (spill/restore): the same invariants must hold — quiescence now
 audits the host tier too — plus ZERO tokens re-prefilled while the
 tier has capacity.
+
+``--cache`` runs the persistent prefix-cache identity sweep
+(tests/test_serving.py): the cache's hard contract is that reviving
+retained blocks changes ZERO decoded bits — sequential arrivals with a
+shared system prompt must decode bit-identical cache-on vs cache-off
+at megastep N in {1, 8} while actually skipping re-prefill; a two-wave
+concurrent workload (revivals interleaved with live sharing) and a
+tight-budget run (LRU evictions mid-workload) must stay identical too.
 
 ``--tele`` runs the tracing-invariance sweep (tests/test_telemetry.py):
 the telemetry plane's hard contract is that arming the span recorder
@@ -660,8 +669,106 @@ def run_tele(arch: str) -> dict:
     return out
 
 
+def run_cache(arch: str) -> dict:
+    """Persistent prefix-cache identity sweep — the cache's hard
+    contract: reviving a retained block maps the SAME physical bytes a
+    live share would, so enabling the cache changes ZERO decoded bits.
+
+    * sequential arrivals, shared system prompt: each request finishes
+      (engine drains) before the next is submitted, so live sharing
+      gets zero hits — cache-on must skip the re-prefills yet decode
+      bit-identical streams to cache-off, at megastep N in {1, 8}
+    * two concurrent waves of the mixed workload: wave 2 revives wave
+      1's retained blocks while live sharing operates within each wave
+    * a tight-budget sequential run over UNIQUE prompts: the cache
+      overflows and LRU-evicts mid-workload; streams stay identical
+    """
+    from repro.runtime.config import EngineConfig
+
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    shared = Stepper(api)
+
+    def mk(cache, megastep, budget=1 << 30):
+        return ContinuousEngine(api, params, config=EngineConfig(
+            hbm_budget=budget, max_batch=MAX_BATCH, block_size=BLOCK,
+            max_context=MAX_CONTEXT, megastep=megastep, host_pool=0,
+            fault_seed=None, prefix_cache=cache), stepper=shared)
+
+    out = {"supported": mk(True, 8).prefix_cache}
+    if not out["supported"]:          # hybrid/SSM archs: cache gated off
+        return out
+
+    rng = np.random.default_rng(11)
+    pfx = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    seqr = [Request(300 + i,
+                    np.concatenate([pfx, rng.integers(
+                        0, cfg.vocab_size, 1 + i % 3).astype(np.int32)]),
+                    max_new_tokens=3 + (i * 5) % 7)
+            for i in range(6)]
+
+    def seq_drive(eng, reqs):
+        done = {}
+        for r in reqs:
+            eng.submit(Request(r.id, r.prompt, r.max_new_tokens))
+            done.update(eng.run())
+        eng.assert_quiescent()
+        return {r.id: done[r.id].tokens for r in reqs}
+
+    streams, engines = {}, {}
+    for m in (1, 8):
+        for cache in (False, True):
+            eng = mk(cache, m)
+            streams[(cache, m)] = seq_drive(eng, seqr)
+            engines[(cache, m)] = eng
+    ref = streams[(False, 1)]
+    out["seq_identical"] = all(s == ref for s in streams.values())
+    out["seq_saved_n8"] = engines[(True, 8)].prefill_tokens_saved_cache
+    out["seq_saved_n1"] = engines[(True, 1)].prefill_tokens_saved_cache
+    out["seq_hits_n8"] = engines[(True, 8)].kv.prefix_cache_hits
+    out["seq_saved_off"] = \
+        engines[(False, 8)].prefill_tokens_saved_cache
+
+    # two concurrent waves: wave 2 resubmits wave 1's prompts under new
+    # ids — cache-on revives retained blocks where cache-off re-prefills
+    reqs = mixed_requests(cfg)
+    waves, hit_blocks = {}, 0
+    for cache in (False, True):
+        eng = mk(cache, 8)
+        for r in reqs:
+            eng.submit(Request(r.id, r.prompt, r.max_new_tokens))
+        d1 = eng.run()
+        for r in reqs:
+            eng.submit(Request(100 + r.id, r.prompt,
+                               r.max_new_tokens))
+        d2 = eng.run()
+        eng.assert_quiescent()
+        waves[cache] = (
+            {r.id: d1[r.id].tokens for r in reqs},
+            {100 + r.id: d2[100 + r.id].tokens for r in reqs})
+        if cache:
+            hit_blocks = eng.kv.prefix_cache_hit_blocks
+    out["concurrent_identical"] = waves[True] == waves[False]
+    out["concurrent_hit_blocks"] = hit_blocks
+
+    # tight budget + unique prompts: the cache tier overflows and LRU-
+    # evicts mid-workload; identity must survive the churn
+    probe = BlockKVCache(cfg, 0, block_size=BLOCK)
+    tight = int((12 * probe.block_bytes
+                 + MAX_BATCH * probe.state_bytes) / 0.6) + 1
+    t_on, t_off = mk(True, 8, budget=tight), mk(False, 8, budget=tight)
+    out["evict_identical"] = \
+        seq_drive(t_on, reqs) == seq_drive(t_off, reqs)
+    out["evictions"] = t_on.kv.prefix_cache_evictions
+    return out
+
+
 if __name__ == "__main__":
     args = sys.argv[1:]
+    if args and args[0] == "--cache":
+        print(json.dumps({arch: run_cache(arch) for arch in args[1:]}))
+        sys.exit(0)
     if args and args[0] == "--tele":
         print(json.dumps({arch: run_tele(arch) for arch in args[1:]}))
         sys.exit(0)

@@ -33,6 +33,14 @@ BASE = {
     "shared_prefix": {"dispatches_per_token": 0.5,
                       "prompt_blocks_acquired": 26,
                       "sharing_engaged": True},
+    "sequential_prefix": {"requests": 6, "prefix_len": 16,
+                          "prefill_tokens_saved_cache": 80,
+                          "cache_hit_blocks": 20,
+                          "cache_hit_rate": 1.0,
+                          "cache_evictions": 0,
+                          "shared_hits_cache_off": 0,
+                          "saved_cache_off": 0,
+                          "identical_streams": True},
     "spill_tier": {"spill": {"prefill_tokens_saved": 290,
                              "reprefill_tokens": 0,
                              "spills": 35, "restores": 35},
@@ -205,6 +213,34 @@ def test_gate_fails_spill_tier_regressions():
     del old_base["spill_tier"]
     regressed = copy.deepcopy(BASE)
     regressed["spill_tier"]["spill"]["prefill_tokens_saved"] = 0
+    assert gate(old_base, regressed, 0.15) == []
+
+
+def test_gate_fails_prefix_cache_regressions():
+    """Prefix-cache gates (armed once the baseline carries the
+    sequential_prefix section): zero tokens saved, stream divergence
+    vs cache-off, a below-threshold drop in tokens saved, or a missing
+    section must each fail."""
+    for mutate, needle in (
+        (lambda r: r["sequential_prefix"].update(
+            prefill_tokens_saved_cache=0), "zero prefill"),
+        (lambda r: r["sequential_prefix"].update(
+            identical_streams=False), "changed decoded streams"),
+        (lambda r: r["sequential_prefix"].update(
+            prefill_tokens_saved_cache=30), "tokens saved"),  # -62%
+        (lambda r: r.pop("sequential_prefix"), "sequential_prefix"),
+    ):
+        bad = copy.deepcopy(BASE)
+        mutate(bad)
+        out = gate(BASE, bad, 0.15)
+        assert any(needle in v for v in out), (needle, out)
+
+    # forward compatibility: a baseline WITHOUT the section gates
+    # nothing even if the fresh report regressed
+    old_base = copy.deepcopy(BASE)
+    del old_base["sequential_prefix"]
+    regressed = copy.deepcopy(BASE)
+    regressed["sequential_prefix"]["prefill_tokens_saved_cache"] = 0
     assert gate(old_base, regressed, 0.15) == []
 
 

@@ -264,6 +264,73 @@ def test_budget_shrink_spills_and_restores(model):
     eng.assert_quiescent()                # audits the host tier too
 
 
+def test_budget_shrink_evicts_cache_before_demoting(model):
+    """With the persistent prefix cache populated, a mid-run budget
+    shrink must reclaim the cold cache tier FIRST: the cached blocks
+    absorb the whole shrink and no live request is ever demoted."""
+    from repro.runtime.config import EngineConfig
+    cfg, api, params = model
+    probe = BlockKVCache(cfg, 0, block_size=4)
+    eng = ContinuousEngine(api, params, config=EngineConfig(
+        hbm_budget=12 * probe.block_bytes, max_batch=3, block_size=4,
+        max_context=32, megastep=1, retry_backoff_s=0.0,
+        prefix_cache=True))
+    assert eng.prefix_cache
+    # phase 1: two sequential requests park their prompt blocks in the
+    # cache tier (engine drains between them — nothing live holds them)
+    for i, p in enumerate(_prompts(cfg, 2, plen=9, seed=3)):
+        eng.submit(Request(i, p, max_new_tokens=4))
+        assert eng.run()[i].ok
+    assert eng.kv.cached_blocks > 0
+    eng.assert_quiescent()                # cache-aware drain audit
+    # phase 2: live work under a shrink the cache tier alone absorbs
+    eng.faults = FaultPlane([FaultEvent(
+        eng.iterations + 2, "budget",
+        budget_bytes=9 * probe.block_bytes)])
+    for i, p in enumerate(_prompts(cfg, 2, plen=6, seed=4)):
+        eng.submit(Request(10 + i, p, max_new_tokens=10))
+    done = eng.run()
+    assert all(done[10 + i].ok and len(done[10 + i].tokens) == 10
+               for i in range(2))
+    assert eng.kv.prefix_cache_evictions > 0, \
+        "shrink never touched the cache tier"
+    assert eng.preemptions == 0, \
+        "live request demoted while cold cache was evictable"
+    assert eng.kv.in_use <= eng.kv.budget
+    eng.assert_quiescent()
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_cache_tier_survives_budget_chaos(model, seed):
+    """Random budget fault schedules against a cache-enabled engine on
+    a shared-prefix workload: every id resolves, nothing wedges, and
+    the drain audit proves zero leaked blocks + consistent cache-tier
+    refcounts after the churn (shrinks evict, revivals re-admit)."""
+    from repro.runtime.config import EngineConfig
+    cfg, api, params = model
+    probe = BlockKVCache(cfg, 0, block_size=4)
+    eng = ContinuousEngine(api, params, config=EngineConfig(
+        hbm_budget=12 * probe.block_bytes, max_batch=3, block_size=4,
+        max_context=32, megastep=1, retry_backoff_s=0.0,
+        prefix_cache=True))
+    eng.faults = FaultPlane.random(
+        seed, budget_bytes=eng.kv.budget,
+        request_ids=list(range(6)), max_batch=3, kinds=("budget",))
+    rng = np.random.default_rng(seed)
+    pfx = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    for i in range(6):
+        tail = rng.integers(0, cfg.vocab_size,
+                            1 + i % 3).astype(np.int32)
+        eng.submit(Request(i, np.concatenate([pfx, tail]),
+                           max_new_tokens=5))
+    done = eng.run(max_iters=2000)
+    assert sorted(done) == list(range(6))
+    for i in range(6):
+        assert done[i].status in COMPLETION_STATUSES
+        assert done[i].reason != "max_iters", "engine wedged"
+    eng.assert_quiescent()
+
+
 def test_spill_falls_back_to_demote_when_host_tier_full(model):
     """A host pool too small for even one slot's blocks: preemption
     demote-discards exactly as without the tier — the run still

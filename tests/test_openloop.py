@@ -69,6 +69,17 @@ def test_open_loop_deterministic_and_schedule_invariant(child_report):
     assert child_report["openloop_ttft_positive"]
 
 
+def test_trace_replay_through_engine(child_report):
+    """save_trace -> from_trace replayed through a REAL engine resolves
+    every recorded id with bit-identical streams and identical status
+    accounting to the Poisson leg it was recorded from — the engine
+    half of the round trip (test_trace_round_trip covers the workload
+    half)."""
+    assert child_report["trace_replay_streams"]
+    assert child_report["trace_replay_status"]
+    assert child_report["trace_replay_accounted"]
+
+
 # -- workload generation (pure python) ---------------------------------------
 
 def test_poisson_workload_deterministic_and_ordered():

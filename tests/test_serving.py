@@ -76,6 +76,55 @@ def test_prefix_sharing_lossless_and_engaged(identity_report):
         assert r["sharing_saved_blocks"] > 0, arch
 
 
+@pytest.fixture(scope="module")
+def cache_report():
+    proc = subprocess.run(
+        [sys.executable, CHILD, "--cache"] + IDENTITY_ARCHS,
+        capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_prefix_cache_lossless_and_engaged(cache_report):
+    """Persistent prefix cache: sequential arrivals (live sharing gets
+    zero hits) must decode bit-identical streams cache-on vs cache-off
+    at megastep N in {1, 8}, while the cache actually skips re-prefill;
+    hybrid/SSM archs must gate the cache off entirely."""
+    engaged = 0
+    for arch in IDENTITY_ARCHS:
+        r = cache_report[arch]
+        if not r["supported"]:        # hybrid/SSM: state can't outlive
+            continue                  # its slot; cache must stay off
+        engaged += 1
+        assert r["seq_identical"], f"{arch}: cache changed streams"
+        assert r["seq_saved_n8"] > 0 and r["seq_saved_n1"] > 0, \
+            f"{arch}: cache saved no prefill on sequential arrivals"
+        assert r["seq_saved_n8"] == r["seq_saved_n1"], \
+            f"{arch}: savings differ across megastep N"
+        assert r["seq_hits_n8"] > 0, arch
+        assert r["seq_saved_off"] == 0, \
+            f"{arch}: cache-off engine reported savings"
+    assert engaged > 0, "no arch exercised the prefix cache"
+
+
+def test_prefix_cache_concurrent_and_eviction_identity(cache_report):
+    """Revivals interleaved with live sharing (two concurrent waves)
+    and LRU evictions under a tight budget must both leave streams
+    bit-identical to cache-off."""
+    for arch in IDENTITY_ARCHS:
+        r = cache_report[arch]
+        if not r["supported"]:
+            continue
+        assert r["concurrent_identical"], \
+            f"{arch}: concurrent revival changed streams"
+        assert r["concurrent_hit_blocks"] > 0, \
+            f"{arch}: second wave never hit the cache"
+        assert r["evict_identical"], \
+            f"{arch}: eviction churn changed streams"
+        assert r["evictions"] > 0, \
+            f"{arch}: tight-budget run never evicted"
+
+
 def test_single_paged_trace_across_engines(identity_report):
     """Every paged engine with one pool shape — including preempting,
     tight-budget and sharing engines — reuses ONE compiled paged decode

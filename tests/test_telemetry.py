@@ -339,7 +339,9 @@ def test_engine_span_taxonomy(model, shared_stepper):
     assert all(e["args"]["restore_eta_iteration"] == 9 for e in stalled)
     assert eng.stalls == len(stalled)
 
-    expected = set(SPAN_KINDS) - {"segment"}   # segment is hetero-only
+    # segment is hetero-only; cache_evict needs prefix_cache=True, and
+    # every engine above runs cache-off (test_prefix_cache.py covers it)
+    expected = set(SPAN_KINDS) - {"segment", "cache_evict"}
     assert seen == expected
     # schema: every event stamped and shaped per its kind (the fault
     # run rides along so spill/restore/stalled are schema-checked too)
